@@ -1,0 +1,84 @@
+"""Paper 'table': complexity-relevance tradeoff of the cascaded modes
+(Alg. 1 / Fig. 9 quantities) on the synthetic Lumos5G twin.
+
+Columns: mode, payload bytes/query, val loss, val acc, I(z;X) proxy width.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, get_reduced
+from repro.configs.base import TrainConfig
+from repro.core import cascade as C
+from repro.data import lumos5g
+from repro.models import lstm as LSTM
+
+
+def run(full: bool = False, steps_per_phase: int = 150,
+        verbose: bool = False) -> Dict:
+    lcfg = get_config("lumos5g-lstm") if full else get_reduced("lumos5g-lstm")
+    dcfg = lumos5g.Lumos5GConfig(
+        n_samples=70_000 if full else 6_000, seq_len=lcfg.seq_len)
+    data = lumos5g.generate(dcfg)
+    train, test = lumos5g.train_test_split(data, dcfg)
+    params = LSTM.init_params(jax.random.PRNGKey(0), lcfg)
+
+    it = lumos5g.batch_iterator(train, lcfg.batch_size if full else 128)
+    batches = [next(it) for _ in range(steps_per_phase * 2)]
+
+    def data_iter(step):
+        b = batches[step % len(batches)]
+        return {"x": jnp.asarray(b["x"]), "y": jnp.asarray(b["y"])}
+
+    test_b = {"x": jnp.asarray(test["x"][:1024]),
+              "y": jnp.asarray(test["y"][:1024])}
+
+    def eval_fn(params, mode):
+        loss, m = LSTM.loss_fn(params, test_b, lcfg, mode)
+        return {"loss": loss, "acc": m["acc"]}
+
+    tcfg = TrainConfig(
+        learning_rate=lcfg.learning_rate if full else 5e-3,
+        warmup_steps=10, total_steps=steps_per_phase * 2, weight_decay=0.0)
+    t0 = time.time()
+    params, hist = C.train_cascade(
+        params, lambda p, b, m: LSTM.loss_fn(p, b, lcfg, m), data_iter,
+        tcfg, n_modes=2, steps_per_phase=steps_per_phase,
+        phase_mask_fn=lambda p, ph: LSTM.phase_mask(p, ph),
+        eval_fn=eval_fn, verbose=verbose)
+    wall = time.time() - t0
+
+    z_bytes = lcfg.enc_cells[-1] * 4            # z: fp32 final state
+    zp_bytes = lcfg.bottleneck_cells * 1 + 2    # z': int8 + scale
+    rows = []
+    for mode in (0, 1):
+        e = hist["phases"][mode]["eval"]
+        rows.append({
+            "mode": mode,
+            "payload_bytes": z_bytes if mode == 0 else zp_bytes,
+            "val_loss": round(e["loss"], 4),
+            "val_acc": round(e["acc"], 4),
+            "code_width": lcfg.enc_cells[-1] if mode == 0
+            else lcfg.bottleneck_cells,
+        })
+    return {"rows": rows, "ensure_ordered": hist["ensure"]["ordered"],
+            "wall_s": wall}
+
+
+def main():
+    out = run()
+    for r in out["rows"]:
+        print(f"cascade_mode{r['mode']},"
+              f"{out['wall_s'] * 1e6 / 300:.0f},"
+              f"bytes={r['payload_bytes']} loss={r['val_loss']} "
+              f"acc={r['val_acc']}")
+    print(f"cascade_ensure,0,ordered={out['ensure_ordered']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Kernel micro-benchmarks: wall time of the jnp reference path on CPU (the
+Pallas kernels themselves target TPU; interpret mode is a correctness tool,
+not a timing tool) + derived wire-compression ratios of the fused
+bottleneck-quant payload."""
+from __future__ import annotations
+
+import time
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, iters=20) -> float:
+    fn(*args)                          # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6   # us
+
+
+def run() -> Dict:
+    key = jax.random.PRNGKey(0)
+    M, K, N, D = 512, 2048, 512, 2048
+    x = jax.random.normal(key, (M, K), jnp.float32)
+    w_down = 0.02 * jax.random.normal(key, (K, N), jnp.float32)
+    w_up = 0.02 * jax.random.normal(key, (N, D), jnp.float32)
+
+    bq_ref = jax.jit(lambda x, w: ref.bottleneck_quant_ref(x, w))
+    us_bq = _time(bq_ref, x, w_down)
+    codes, scales = bq_ref(x, w_down)
+    dq_ref = jax.jit(lambda c, s, w: ref.dequant_matmul_ref(c, s, w))
+    us_dq = _time(dq_ref, codes, scales, w_up)
+
+    a = jax.nn.sigmoid(jax.random.normal(key, (4, 1024, 512)))
+    b = jax.random.normal(key, (4, 1024, 512))
+    rs_ref = jax.jit(ref.rglru_scan_ref)
+    us_rs = _time(rs_ref, a, b, iters=5)
+
+    raw_bytes = M * K * 2                          # boundary bf16
+    wire_bytes = M * N * 1 + M * 2                 # int8 + scales
+    return {
+        "bottleneck_quant_us": us_bq, "dequant_matmul_us": us_dq,
+        "rglru_scan_us": us_rs,
+        "wire_compression": wire_bytes / raw_bytes,
+    }
+
+
+def main():
+    out = run()
+    print(f"kernel_bottleneck_quant,{out['bottleneck_quant_us']:.0f},"
+          f"wire_ratio={out['wire_compression']:.4f}")
+    print(f"kernel_dequant_matmul,{out['dequant_matmul_us']:.0f},decoder_side")
+    print(f"kernel_rglru_scan,{out['rglru_scan_us']:.0f},B4xS1024xD512")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Roofline table: reads results/dryrun/*.json (produced by
+``python -m repro.launch.dryrun``) and prints the per-(arch x shape x mesh)
+three-term roofline with the dominant bottleneck and useful-FLOPs ratio."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results",
+                           "dryrun")
+
+
+def load_all() -> List[Dict]:
+    rows = []
+    for f in sorted(glob.glob(os.path.join(RESULTS_DIR, "*.json"))):
+        with open(f) as fh:
+            rows.append(json.load(fh))
+    return rows
+
+
+def main():
+    rows = load_all()
+    if not rows:
+        print("roofline_table,0,no dryrun results — run "
+              "`PYTHONPATH=src python -m repro.launch.dryrun` first")
+        return
+    for d in rows:
+        r = d["roofline"]
+        name = f"{d['arch']}|{d['shape']}|{d['mesh']}"
+        if d.get("variant", "baseline") != "baseline":
+            name += f"|{d['variant']}"
+        if not d.get("seq_shard", True):
+            name += "|noseqshard"
+        print(f"roofline_{name},{r['bound_s']*1e6:.0f},"
+              f"c={r['compute_s']*1e3:.1f}ms "
+              f"m={r['memory_s']*1e3:.1f}ms "
+              f"coll={r['collective_s']*1e3:.1f}ms "
+              f"dom={r['dominant'][:-2]} "
+              f"useful={d['useful_ratio']:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark harness — one entry per paper table/figure:
+
+  bench_cascade      Alg. 1 / Fig. 9: per-mode payload vs predictive quality
+  bench_infoplane    Fig. 9: information-plane trajectories, both phases
+  bench_temporal_mi  Figs. 7-8 + Sec. VI: temporal MI + conditional ladder
+  bench_modes        Fig. 3/5: dynamic switching vs static policies
+  bench_kernels      kernel layer micro-bench + wire compression
+  bench_roofline     deliverable (g): roofline table from dry-run artifacts
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (bench_cascade, bench_infoplane, bench_kernels,
+                            bench_modes, bench_roofline, bench_temporal_mi)
+    suites = [
+        ("cascade", bench_cascade.main),
+        ("modes", bench_modes.main),
+        ("kernels", bench_kernels.main),
+        ("temporal_mi", bench_temporal_mi.main),
+        ("infoplane", bench_infoplane.main),
+        ("roofline", bench_roofline.main),
+    ]
+    failed = []
+    for name, fn in suites:
+        print(f"# --- {name} ---")
+        try:
+            fn()
+        except Exception:                       # noqa: BLE001
+            failed.append(name)
+            traceback.print_exc()
+    if failed:
+        print(f"# FAILED suites: {failed}")
+        sys.exit(1)
+    print("# all benchmark suites completed")
+
+
+if __name__ == '__main__':
+    main()

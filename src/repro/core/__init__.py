@@ -1,0 +1,7 @@
+"""The paper's primary contribution: dynamic split-learning encoding/decoding
+with IB-guided multi-mode bottlenecks (Algorithm 1 cascade + orchestrator)."""
+from repro.core import (bottleneck, cascade, channel, ib, orchestrator,
+                        pipeline, quant, split)
+
+__all__ = ["bottleneck", "cascade", "channel", "ib", "orchestrator",
+           "pipeline", "quant", "split"]

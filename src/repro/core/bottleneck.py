@@ -1,0 +1,82 @@
+"""Bottleneck exit heads — the paper's added "layer A" (encoder side) and
+"layer B" (decoder side), generalized to a bank of modes.
+
+Mode 0 is always the phase-1 code z: the raw split-boundary activation
+(transmitted in bf16). Mode m >= 1 adds a trained down-projection
+(layer A) producing z' of width ``d_bottleneck_m``, quantized for the wire,
+and an up-projection adapter (layer B) that maps the received code back into
+the frozen decoder's input width — exactly Algorithm 1 lines 3-5.
+
+By the data-processing inequality, each extra mode can only lose information
+about X (and hence Y): I(X; z') <= I(X; z). The cascade trainer
+(``repro.core.cascade``) enforces the paper's "Ensure" line empirically.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, SplitConfig
+from repro.core import quant
+from repro.models.layers import dense_apply, dense_init, norm_apply, norm_init
+
+
+def mode_widths(split: SplitConfig) -> List[Tuple[int, int]]:
+    """[(width, quant_bits)] for modes 1..M (mode 0 is the raw boundary)."""
+    out = []
+    if split.d_bottleneck:
+        out.append((split.d_bottleneck, split.quant_bits))
+    out.extend(split.extra_modes)
+    return out
+
+
+def head_init(key, d_model: int, d_bneck: int, *, dtype=jnp.bfloat16):
+    k1, k2 = jax.random.split(key)
+    return {
+        "norm": norm_init(d_model, "rmsnorm", dtype=dtype),
+        "down": dense_init(k1, d_model, d_bneck, dtype=dtype),   # layer A
+        "up": dense_init(k2, d_bneck, d_model, dtype=dtype),     # layer B
+    }
+
+
+def bank_init(key, cfg: ModelConfig, *, dtype=jnp.bfloat16):
+    modes = mode_widths(cfg.split)
+    keys = jax.random.split(key, max(len(modes), 1))
+    return tuple(head_init(k, cfg.d_model, w, dtype=dtype)
+                 for k, (w, _) in zip(keys, modes))
+
+
+def encode(head, x, bits: int, *, train: bool = False):
+    """Encoder-side transmit op (layer A + wire quantization).
+
+    x: [..., d_model] -> (codes, scales) — the payload that crosses the link.
+    ``train=True`` uses the straight-through fake-quantizer (float payload,
+    identical forward values) so gradients reach layer A during cascade
+    phase 2; the wire format for serving/dry-run stays int8.
+    """
+    z = dense_apply(head["down"], norm_apply(head["norm"], x, "rmsnorm"))
+    if train and bits:
+        return quant.ste_quantize(z, bits), None
+    return quant.quantize(z, bits)
+
+
+def decode(head, codes, scales, bits: int, dtype=jnp.bfloat16):
+    """Decoder-side receive op (dequant + layer B adapter). ``scales`` is
+    None on the STE training path (codes already float)."""
+    z = codes if scales is None else quant.dequantize(codes, scales, bits)
+    return dense_apply(head["up"], z.astype(dtype))
+
+
+def mode_payload_bytes(cfg: ModelConfig, batch: int, seq: int, mode: int) -> int:
+    """Wire bytes for one boundary transfer in the given mode."""
+    if mode == 0:
+        return quant.payload_bytes((batch, seq, cfg.d_model), 0)
+    w, bits = mode_widths(cfg.split)[mode - 1]
+    return quant.payload_bytes((batch, seq, w), bits)
+
+
+def compression_ratio(cfg: ModelConfig, mode: int) -> float:
+    full = mode_payload_bytes(cfg, 1, 1, 0)
+    return mode_payload_bytes(cfg, 1, 1, mode) / full

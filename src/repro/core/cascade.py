@@ -1,0 +1,120 @@
+"""Algorithm 1 — cascaded training producing multiple complexity-relevance
+modes from ONE encoder/decoder pair.
+
+Phase 1 trains the base network (mode 0: raw boundary code z).
+Phase m+1 freezes everything trained so far, trains only bottleneck head m
+(layer A: down-proj; layer B: up-proj adapter), exactly the paper's lines 2-6.
+The "Ensure I(Y; Dec1) <= I(Y; Dec2)" line is checked empirically after each
+phase via validation loss ordering (``verify_mode_ordering``).
+
+Works for both the paper's LSTM PoC (``repro.models.lstm``) and any split
+transformer (``repro.core.split``) — the trainer only needs a loss function
+per mode and a phase mask.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.training import optimizer as opt
+
+
+# ---------------------------------------------------------------------------
+# phase masks
+# ---------------------------------------------------------------------------
+
+def transformer_phase_mask(params, phase: int):
+    """phase 1: everything except the bottleneck bank; phase m >= 2: only
+    head (m-2) of the bank."""
+    def mark(key, sub, trainable):
+        return jax.tree.map(lambda _: trainable, sub)
+
+    mask = {}
+    for k, v in params.items():
+        if k == "bneck_modes":
+            mask[k] = tuple(
+                jax.tree.map(lambda _: (phase - 2) == i, head)
+                for i, head in enumerate(v))
+        else:
+            mask[k] = jax.tree.map(lambda _: phase == 1, v)
+    return mask
+
+
+# ---------------------------------------------------------------------------
+# generic cascaded trainer
+# ---------------------------------------------------------------------------
+
+def make_train_step(loss_fn: Callable, tcfg: TrainConfig):
+    """loss_fn(params, batch, mode) -> (loss, metrics)."""
+    @functools.partial(jax.jit, static_argnames=("mode",))
+    def step(params, opt_state, batch, mask, *, mode: int):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch, mode)
+        params, opt_state, info = opt.apply_updates(
+            params, grads, opt_state, tcfg, mask)
+        metrics = dict(metrics, loss=loss, **info)
+        return params, opt_state, metrics
+    return step
+
+
+def train_cascade(params,
+                  loss_fn: Callable,
+                  data_iter: Callable[[int], Any],
+                  tcfg: TrainConfig,
+                  *,
+                  n_modes: int,
+                  steps_per_phase: int,
+                  phase_mask_fn: Callable = transformer_phase_mask,
+                  eval_fn: Optional[Callable] = None,
+                  log_every: int = 50,
+                  verbose: bool = True) -> Tuple[Any, Dict]:
+    """Run Algorithm 1 over ``n_modes`` modes (phases 1..n_modes).
+
+    ``data_iter(step)`` yields a batch; ``loss_fn(params, batch, mode)``.
+    ``eval_fn(params, mode)`` -> dict with 'loss'/'acc' for the Ensure check.
+    Returns (params, history).
+    """
+    step_fn = make_train_step(loss_fn, tcfg)
+    opt_state = opt.init(params)
+    history: Dict[str, Any] = {"phases": []}
+    global_step = 0
+    for phase in range(1, n_modes + 1):
+        mode = phase - 1
+        mask = phase_mask_fn(params, phase)
+        phase_log: List[Dict] = []
+        for s in range(steps_per_phase):
+            batch = data_iter(global_step)
+            params, opt_state, m = step_fn(params, opt_state, batch, mask,
+                                           mode=mode)
+            global_step += 1
+            if s % log_every == 0 or s == steps_per_phase - 1:
+                rec = {k: float(v) for k, v in m.items()}
+                rec["step"] = s
+                phase_log.append(rec)
+                if verbose:
+                    print(f"[cascade] phase {phase} step {s:4d} "
+                          f"loss {rec['loss']:.4f} acc {rec.get('acc', 0):.3f}")
+        entry = {"phase": phase, "mode": mode, "log": phase_log}
+        if eval_fn is not None:
+            entry["eval"] = {k: float(v)
+                             for k, v in eval_fn(params, mode).items()}
+        history["phases"].append(entry)
+    if eval_fn is not None:
+        history["ensure"] = verify_mode_ordering(params, eval_fn, n_modes)
+    return params, history
+
+
+def verify_mode_ordering(params, eval_fn: Callable, n_modes: int) -> Dict:
+    """The paper's Ensure line: each extra bottleneck mode must perform at
+    most as well as the previous (relevance ordering by DPI)."""
+    evals = [eval_fn(params, m) for m in range(n_modes)]
+    losses = [float(e["loss"]) for e in evals]
+    ordered = all(losses[i] <= losses[i + 1] + 1e-3
+                  for i in range(len(losses) - 1))
+    return {"losses": losses,
+            "accs": [float(e.get("acc", 0.0)) for e in evals],
+            "ordered": ordered}

@@ -1,0 +1,3 @@
+from repro.core.ib import binning, gcmi, info_plane, kde
+
+__all__ = ["binning", "gcmi", "info_plane", "kde"]

@@ -1,0 +1,96 @@
+"""The paper's orchestrator (Fig. 3): monitors network conditions + decoder
+performance feedback and instructs the encoder which latent code to transmit.
+
+Policy: among the calibrated modes, pick the most relevant (lowest expected
+loss) whose transfer latency fits the application's budget, with hysteresis
+to avoid mode flapping. This is the "optimization/search problem" framing the
+paper suggests in Sec. VI.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+from repro.core.channel import tx_seconds
+
+
+@dataclass
+class ModeProfile:
+    """Calibration entry per mode (from cascade validation)."""
+    mode: int
+    payload_bytes: int        # per-query boundary payload
+    expected_loss: float      # validation loss of this mode
+    expected_acc: float = 0.0
+
+
+@dataclass
+class AppRequirement:
+    latency_budget_s: float = 0.05   # per-query transfer budget
+    min_acc: float = 0.0             # slice-dependent floor (0 = best effort)
+
+
+@dataclass
+class OrchestratorState:
+    mode: int = 0
+    capacity_ema: float = 0.0
+    loss_ema: Dict[int, float] = field(default_factory=dict)
+    switches: int = 0
+    ticks: int = 0
+
+
+class Orchestrator:
+    def __init__(self, profiles: List[ModeProfile],
+                 requirement: AppRequirement = AppRequirement(),
+                 *, ema: float = 0.8, hysteresis: float = 0.85):
+        if not profiles:
+            raise ValueError("need at least one mode profile")
+        self.profiles = sorted(profiles, key=lambda p: p.mode)
+        self.req = requirement
+        self.ema = ema
+        self.hysteresis = hysteresis
+        self.state = OrchestratorState(
+            mode=self.profiles[0].mode,
+            loss_ema={p.mode: p.expected_loss for p in self.profiles})
+
+    # -- feedback signals (Fig. 3 arrows) ------------------------------------
+    def observe_capacity(self, capacity_bps: float):
+        s = self.state
+        s.capacity_ema = (self.ema * s.capacity_ema
+                          + (1 - self.ema) * capacity_bps
+                          if s.ticks else capacity_bps)
+        s.ticks += 1
+
+    def observe_decoder_loss(self, mode: int, loss: float):
+        prev = self.state.loss_ema.get(mode, loss)
+        self.state.loss_ema[mode] = self.ema * prev + (1 - self.ema) * loss
+
+    # -- decision -------------------------------------------------------------
+    def feasible(self, p: ModeProfile, capacity_bps: float) -> bool:
+        return tx_seconds(p.payload_bytes, capacity_bps) \
+            <= self.req.latency_budget_s
+
+    def choose_mode(self) -> int:
+        cap = self.state.capacity_ema
+        # rank by relevance (EMA loss asc); most informative feasible wins
+        ranked = sorted(self.profiles,
+                        key=lambda p: self.state.loss_ema[p.mode])
+        chosen: Optional[ModeProfile] = None
+        for p in ranked:
+            if self.req.min_acc and p.expected_acc < self.req.min_acc:
+                continue
+            if self.feasible(p, cap):
+                chosen = p
+                break
+        if chosen is None:           # nothing fits: smallest payload
+            chosen = min(self.profiles, key=lambda p: p.payload_bytes)
+        # hysteresis: only leave the current mode if the alternative's
+        # required capacity clears by a margin
+        cur = next(p for p in self.profiles if p.mode == self.state.mode)
+        if chosen.mode != cur.mode and chosen.payload_bytes > cur.payload_bytes:
+            if not self.feasible(chosen, cap * self.hysteresis):
+                chosen = cur
+        if chosen.mode != self.state.mode:
+            self.state.switches += 1
+            self.state.mode = chosen.mode
+        return self.state.mode

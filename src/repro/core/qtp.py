@@ -1,0 +1,177 @@
+"""Quantized tensor-parallel prefill — the paper's insight applied to the
+intra-layer TP boundary (beyond-paper, see EXPERIMENTS.md §Perf pair A).
+
+The paper compresses the ONE split-learning boundary (bottleneck + int8)
+because it crosses the weakest link. Under Megatron-style TP the residual
+stream crosses the `model` axis twice per layer (gather before attention /
+MLP, reduce-scatter after), and GSPMD's auto placement makes those transfers
+the dominant roofline term for small-batch prefill (musicgen-large
+prefill_32k: 66.8s collective vs 0.40s compute at baseline).
+
+This module pins the Megatron-SP schedule manually under ``shard_map`` and
+quantizes the gathered operand to int8 (the activations entering a matmul —
+W8A8 semantics, standard for inference):
+
+    x_loc [B, S/m, d]   (sequence-sharded residual, bf16)
+    norm -> quantize int8 -> all_gather('model') -> dequant -> matmul block
+    partial sums [B, S, d] -> psum_scatter('model') -> + residual
+
+  per-device collective bytes/layer = 2 * B*S*d * (1 byte) [+ small scales
+  and the scattered f32 partials] — 4x less than the bf16 auto placement
+  and ~8x less than what the f32-promoted CPU HLO reports.
+
+``bits=0`` keeps the gather in bf16 — the exact-precision manual schedule,
+used to isolate "manual SP" gains from quantization gains in §Perf.
+
+Scope guard (``qtp_supported``): homogeneous attention stacks with
+n_heads, n_kv_heads, and seq all divisible by the `model` axis; decode and
+training use the regular paths.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.core import quant
+from repro.models import sharding
+from repro.models import transformer as T
+from repro.models.attention import (BLOCKED_ATTN_THRESHOLD, _BLOCK_K,
+                                    _BLOCK_Q, _blocked_attention,
+                                    _dense_attention, apply_rope)
+from repro.models.layers import _act, norm_apply
+
+
+def qtp_supported(cfg: ModelConfig, mesh, seq_len: int) -> bool:
+    if mesh is None or "model" not in mesh.shape:
+        return False
+    m = mesh.shape["model"]
+    return (cfg.homogeneous and not cfg.is_moe
+            and cfg.n_heads % m == 0 and cfg.n_kv_heads % m == 0
+            and seq_len % m == 0 and cfg.d_ff % m == 0)
+
+
+def _qgather(x, bits: int, axis: str):
+    """quantize -> all_gather(seq axis) -> dequantize. x: [B, S_loc, d]."""
+    if bits == 0:
+        g = jax.lax.all_gather(x, axis, axis=1, tiled=True)
+        return g
+    codes, scales = quant.quantize(x, bits)        # int8 codes + row scales
+    codes = jax.lax.all_gather(codes, axis, axis=1, tiled=True)
+    scales = jax.lax.all_gather(scales, axis, axis=1, tiled=True)
+    return quant.dequantize(codes, scales, bits).astype(x.dtype)
+
+
+def qtp_forward(params, tokens, cfg: ModelConfig, *, mesh, bits: int = 8,
+                embeddings=None) -> jnp.ndarray:
+    """Prefill forward with the manual quantized-SP schedule.
+
+    Returns logits (same contract as ``T.forward`` without aux — dense
+    archs only).
+    """
+    m = mesh.shape["model"]
+    x = T.embed_tokens(params, tokens, cfg, embeddings)
+    B, S = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    n_q, n_kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ql, kvl = n_q // m, n_kv // m
+    dp = sharding.dp_axes(mesh)
+
+    # fully-manual shard_map: batch over the dp axes, seq over `model`;
+    # layer weights shard their head/ffn dim over `model` and replicate over
+    # dp (jit all-gathers them ONCE outside the scan — ~params/m bytes, tiny
+    # next to the per-layer activation traffic this path eliminates).
+    wspec = {
+        "mix": {"wq": {"w": P(None, None, "model")},
+                "wk": {"w": P(None, None, "model")},
+                "wv": {"w": P(None, None, "model")},
+                "wo": {"w": P(None, "model", None)}},
+        "mlp": {"w_gate": {"w": P(None, None, "model")},
+                "w_up": {"w": P(None, None, "model")},
+                "w_down": {"w": P(None, "model", None)}},
+    }
+    layers = dict(params["layers"])
+    if "mix" in layers and "b" in layers["mix"].get("wq", {}):
+        for k in ("wq", "wk", "wv"):
+            wspec["mix"][k]["b"] = P(None, "model")
+
+    def inner(layers_l, x_loc, pos):
+        # x_loc: [B/dp, S/m, d]; pos: [B/dp, S]; layers_l: stacked [L, ...]
+        # with head/ffn dims local to this chip, replicated over dp.
+        Bl = x_loc.shape[0]
+
+        def block(x_loc, lp):
+            # ---- attention ----
+            h = norm_apply(lp["norm1"], x_loc, cfg.norm)
+            hg = _qgather(h, bits, "model")                     # [Bl, S, d]
+            q = (hg @ lp["mix"]["wq"]["w"]).reshape(Bl, S, ql, hd)
+            k = (hg @ lp["mix"]["wk"]["w"]).reshape(Bl, S, kvl, hd)
+            v = (hg @ lp["mix"]["wv"]["w"]).reshape(Bl, S, kvl, hd)
+            if "b" in lp["mix"].get("wq", {}):
+                q = q + lp["mix"]["wq"]["b"].reshape(ql, hd)
+                k = k + lp["mix"]["wk"]["b"].reshape(kvl, hd)
+                v = v + lp["mix"]["wv"]["b"].reshape(kvl, hd)
+            q = apply_rope(q, pos, cfg.rope_theta)
+            k = apply_rope(k, pos, cfg.rope_theta)
+            w = cfg.sliding_window or cfg.local_window
+            if S >= BLOCKED_ATTN_THRESHOLD and S % _BLOCK_Q == 0 \
+                    and S % _BLOCK_K == 0:
+                attn = _blocked_attention(q, k, v, pos, hd, w)
+            else:
+                attn = _dense_attention(q, k, v, pos, hd, w)
+            attn = attn.astype(x_loc.dtype)          # [Bl, S, ql*hd]
+            part = attn @ lp["mix"]["wo"]["w"]                  # partial [B,S,d]
+            # f32 around the scatter-reduce: XLA CPU crashes promoting bf16
+            # reduces (same workaround as pipeline.py); on TPU this would be
+            # a plain bf16 psum_scatter
+            mix = jax.lax.psum_scatter(part.astype(jnp.float32), "model",
+                                       scatter_dimension=1,
+                                       tiled=True)              # [B, S/m, d]
+            x_loc = x_loc + mix.astype(x_loc.dtype)
+            # ---- mlp ----
+            h = norm_apply(lp["norm2"], x_loc, cfg.norm)
+            hg = _qgather(h, bits, "model")
+            hh = _act(hg @ lp["mlp"]["w_gate"]["w"], cfg.act) * \
+                (hg @ lp["mlp"]["w_up"]["w"])
+            part = hh @ lp["mlp"]["w_down"]["w"]
+            mlp = jax.lax.psum_scatter(part.astype(jnp.float32), "model",
+                                       scatter_dimension=1, tiled=True)
+            return x_loc + mlp.astype(x_loc.dtype), None
+
+        out, _ = jax.lax.scan(block, x_loc, layers_l)
+        return out
+
+    shmap = jax.shard_map(
+        inner, mesh=mesh,
+        in_specs=(_specs_for(layers, wspec), P(dp, "model", None),
+                  P(dp, None)),
+        out_specs=P(dp, "model", None),
+        check_vma=False)
+
+    with sharding.activation_rules(None, {}):
+        xb = shmap(layers, x, positions)
+    x = T.norm_apply_final(params, xb, cfg)
+    logits = sharding.constrain(T.lm_logits(params, x, cfg), "logits")
+    return logits
+
+
+def _specs_for(layers, wspec):
+    """Match the wspec skeleton to the actual layer pytree (norm params vary
+    by norm type; extra keys default to replicated-over-model)."""
+    def rule(path, leaf):
+        keys = [str(getattr(k, "key", getattr(k, "idx", k))) for k in path]
+        node = wspec
+        for k in keys:
+            if isinstance(node, dict) and k in node:
+                node = node[k]
+            else:
+                return P(*([None] * leaf.ndim))
+        if isinstance(node, P):
+            return node
+        return P(*([None] * leaf.ndim))
+    return jax.tree_util.tree_map_with_path(rule, layers)

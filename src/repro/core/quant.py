@@ -1,0 +1,77 @@
+"""Symmetric row-wise latent-code quantization for the transmitted
+bottleneck payload (pure-jnp reference; the fused Pallas kernel lives in
+``repro.kernels``).
+
+int4 values are stored one-per-int8 here (the Pallas kernel packs two per
+byte on TPU); ``payload_bytes`` accounts for the packed wire format either
+way, since byte accounting is what the orchestrator and the roofline consume.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def qmax(bits: int) -> int:
+    return (1 << (bits - 1)) - 1      # 127 for int8, 7 for int4
+
+
+def quantize(x, bits: int = 8):
+    """Row-wise symmetric quantization over the last dim.
+
+    x: [..., d] float -> (codes int8 [..., d], scales fp32 [..., 1]).
+    """
+    if bits == 0:
+        return x, None
+    xf = x.astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(xf), axis=-1, keepdims=True)
+    scale = jnp.maximum(absmax, 1e-8) / qmax(bits)
+    q = jnp.clip(jnp.round(xf / scale), -qmax(bits), qmax(bits))
+    return q.astype(jnp.int8), scale
+
+
+def dequantize(q, scale, bits: int = 8):
+    if bits == 0:
+        return q
+    return q.astype(jnp.float32) * scale
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def ste_quantize(x, bits: int):
+    """Fake-quantize with a straight-through estimator: forward sees the
+    int8-roundtripped values, backward passes gradients through unchanged.
+    Used on the training path so Algorithm 1's phase-2 bottleneck (which
+    sits BEFORE the wire quantizer) still receives gradients."""
+    q, s = quantize(x, bits)
+    return dequantize(q, s, bits).astype(x.dtype)
+
+
+def _ste_fwd(x, bits):
+    return ste_quantize(x, bits), None
+
+
+def _ste_bwd(bits, _, g):
+    return (g,)
+
+
+ste_quantize.defvjp(_ste_fwd, _ste_bwd)
+
+
+def payload_bytes(shape, bits: int, dtype_bytes: int = 2) -> int:
+    """Wire bytes for a latent of ``shape`` ([..., d]): packed codes +
+    one fp16 scale per row (bits==0 -> raw bf16 payload)."""
+    import math
+    n = math.prod(shape)
+    if bits == 0:
+        return n * dtype_bytes
+    rows = n // shape[-1]
+    return n * bits // 8 + rows * 2
+
+
+def quant_error(x, bits: int = 8) -> jnp.ndarray:
+    """Mean |x - dequant(quant(x))| — used by tests and the orchestrator's
+    relevance calibration."""
+    q, s = quantize(x, bits)
+    return jnp.mean(jnp.abs(x.astype(jnp.float32) - dequantize(q, s, bits)))

@@ -1,0 +1,152 @@
+"""Split-model wrapper: cut any assigned architecture at ``cfg.split.split_at``
+into a UE-side encoder and an edge-side decoder, with the paper's selectable
+bottleneck modes at the boundary.
+
+``split_forward`` is numerically identical to running the full model when
+``mode == 0`` (the boundary is transmitted raw); mode m >= 1 routes the
+boundary through bottleneck head m (down-proj -> quantize -> wire ->
+dequant -> up-proj adapter), which is the phase-2 network of Algorithm 1.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import bottleneck
+from repro.models import sharding
+from repro.models import transformer as T
+
+
+# ---------------------------------------------------------------------------
+# parameter plumbing
+# ---------------------------------------------------------------------------
+
+def init_split_params(key, cfg: ModelConfig) -> Dict[str, Any]:
+    """Full model params + the bottleneck mode bank."""
+    k1, k2 = jax.random.split(key)
+    params = T.init_params(k1, cfg)
+    params["bneck_modes"] = bottleneck.bank_init(
+        k2, cfg, dtype=T.model_dtype(cfg))
+    return params
+
+
+def slice_layers(layers, cfg: ModelConfig, split_at: Optional[int] = None):
+    """(encoder_layers, decoder_layers) views of the layer params."""
+    s = split_at if split_at is not None else cfg.split.split_at
+    if cfg.homogeneous:
+        enc = jax.tree.map(lambda a: a[:s], layers)
+        dec = jax.tree.map(lambda a: a[s:], layers)
+    else:
+        enc, dec = layers[:s], layers[s:]
+    return enc, dec
+
+
+def _kinds(cfg: ModelConfig):
+    return tuple(cfg.block_kind(i) for i in range(cfg.n_layers))
+
+
+# ---------------------------------------------------------------------------
+# full-sequence split forward (training / prefill)
+# ---------------------------------------------------------------------------
+
+def encoder_apply(params, tokens, cfg: ModelConfig, mode: int, *,
+                  train: bool = False, embeddings=None):
+    """UE side. Returns (payload, aux, info) where payload crosses the link.
+
+    mode 0 payload: raw boundary activation (bf16).
+    mode m payload: (int codes, scales) from bottleneck head m.
+    """
+    s = cfg.split.split_at
+    x = T.embed_tokens(params, tokens, cfg, embeddings)
+    B, S = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    enc, _ = slice_layers(params["layers"], cfg, s)
+    x, aux = T.run_layers(enc, x, positions, cfg, train=train,
+                          kinds=_kinds(cfg)[:s])
+    if mode == 0:
+        payload = (x, None)
+        bits = 0
+    else:
+        _, bits = bottleneck.mode_widths(cfg.split)[mode - 1]
+        payload = bottleneck.encode(params["bneck_modes"][mode - 1], x, bits,
+                                    train=train)
+    info = {"positions": positions,
+            "payload_bytes": bottleneck.mode_payload_bytes(cfg, B, S, mode)}
+    return payload, aux, info
+
+
+def decoder_apply(params, payload, positions, cfg: ModelConfig, mode: int, *,
+                  train: bool = False):
+    """Edge side: adapter (mode >= 1) + remaining layers + head."""
+    s = cfg.split.split_at
+    codes, scales = payload
+    if mode == 0:
+        x = codes
+    else:
+        _, bits = bottleneck.mode_widths(cfg.split)[mode - 1]
+        x = bottleneck.decode(params["bneck_modes"][mode - 1], codes, scales,
+                              bits, dtype=T.model_dtype(cfg))
+    _, dec = slice_layers(params["layers"], cfg, s)
+    x, aux = T.run_layers(dec, x, positions, cfg, train=train,
+                          kinds=_kinds(cfg)[s:])
+    x = T.norm_apply_final(params, x, cfg)
+    logits = sharding.constrain(T.lm_logits(params, x, cfg), "logits")
+    return logits, aux
+
+
+def split_forward(params, tokens, cfg: ModelConfig, mode: int = 0, *,
+                  train: bool = False, embeddings=None):
+    """End-to-end split forward (the wire is simulated as identity on values;
+    byte accounting returned in info). Returns (logits, aux, info)."""
+    payload, aux1, info = encoder_apply(params, tokens, cfg, mode,
+                                        train=train, embeddings=embeddings)
+    logits, aux2 = decoder_apply(params, payload, info["positions"], cfg,
+                                 mode, train=train)
+    return logits, aux1 + aux2, info
+
+
+# ---------------------------------------------------------------------------
+# decode-time split (one token across the link per step)
+# ---------------------------------------------------------------------------
+
+def split_decode_step(params, token, states, cur_pos, cfg: ModelConfig,
+                      mode: int = 0):
+    """One-token decode with the boundary activation crossing the link.
+
+    Encoder-side layer states stay on the UE; decoder-side states stay at the
+    edge — only the (possibly bottlenecked) activation is transmitted.
+    Returns (logits, new_states, payload_bytes).
+    """
+    s = cfg.split.split_at
+    x = T.embed_tokens(params, token, cfg, None)
+    enc_l, dec_l = slice_layers(params["layers"], cfg, s)
+    if cfg.homogeneous:
+        enc_st = jax.tree.map(lambda a: a[:s], states)
+        dec_st = jax.tree.map(lambda a: a[s:], states)
+    else:
+        enc_st, dec_st = states[:s], states[s:]
+    kinds = _kinds(cfg)
+    x, enc_new = T.run_layers_decode(enc_l, x, enc_st, cur_pos, cfg,
+                                     kinds=kinds[:s])
+    B = x.shape[0]
+    if mode == 0:
+        payload = (x, None)
+    else:
+        _, bits = bottleneck.mode_widths(cfg.split)[mode - 1]
+        payload = bottleneck.encode(params["bneck_modes"][mode - 1], x, bits)
+        x = bottleneck.decode(params["bneck_modes"][mode - 1], *payload, bits,
+                              dtype=T.model_dtype(cfg))
+    x, dec_new = T.run_layers_decode(dec_l, x, dec_st, cur_pos, cfg,
+                                     kinds=kinds[s:])
+    x = T.norm_apply_final(params, x, cfg)
+    logits = T.lm_logits(params, x, cfg)
+    if cfg.homogeneous:
+        new_states = jax.tree.map(
+            lambda a, b: jnp.concatenate([a, b], axis=0), enc_new, dec_new)
+    else:
+        new_states = tuple(enc_new) + tuple(dec_new)
+    pb = bottleneck.mode_payload_bytes(cfg, B, 1, mode)
+    return logits, new_states, pb

@@ -1,0 +1,3 @@
+from repro.data import lumos5g, tokens
+
+__all__ = ["lumos5g", "tokens"]

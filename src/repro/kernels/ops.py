@@ -1,0 +1,81 @@
+"""Jit'd public wrappers for the Pallas kernels: shape-padding, block-size
+selection, and CPU (interpret-mode) dispatch so the same call sites work in
+tests and on real TPUs.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import bottleneck_quant as _bq
+from repro.kernels import dequant_matmul as _dq
+from repro.kernels import rglru_scan as _rs
+from repro.kernels import ref
+
+_ON_TPU = jax.default_backend() == "tpu"
+
+
+def _pick_block(dim: int, preferred: int, align: int = 128) -> int:
+    """Largest block <= preferred that divides dim, preferring MXU-aligned."""
+    for b in (preferred, preferred // 2, preferred // 4, align):
+        if b and dim % b == 0:
+            return b
+    for b in range(min(preferred, dim), 0, -1):
+        if dim % b == 0:
+            return b
+    return dim
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "interpret"))
+def bottleneck_quant_op(x, w, *, bits: int = 8, interpret: bool | None = None):
+    """Fused down-proj + int8 quantize. x: [..., K], w: [K, N]."""
+    interp = (not _ON_TPU) if interpret is None else interpret
+    lead = x.shape[:-1]
+    M = 1
+    for s in lead:
+        M *= s
+    K, N = w.shape
+    x2 = x.reshape(M, K)
+    bm = _pick_block(M, 128)
+    bk = _pick_block(K, 512)
+    if M % bm or K % bk or N % 128:
+        codes, scales = ref.bottleneck_quant_ref(x2, w, bits)
+    else:
+        codes, scales = _bq.bottleneck_quant(x2, w, bits=bits, block_m=bm,
+                                             block_k=bk, interpret=interp)
+    return codes.reshape(*lead, N), scales.reshape(*lead, 1)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def dequant_matmul_op(codes, scales, w, *, interpret: bool | None = None):
+    """Fused dequant + up-proj. codes: [..., N] int8 -> [..., D] bf16."""
+    interp = (not _ON_TPU) if interpret is None else interpret
+    lead = codes.shape[:-1]
+    M = 1
+    for s in lead:
+        M *= s
+    N, D = w.shape
+    c2 = codes.reshape(M, N)
+    s2 = scales.reshape(M, 1)
+    bm = _pick_block(M, 128)
+    bd = _pick_block(D, 512)
+    if M % bm or D % bd or N % 128:
+        y = ref.dequant_matmul_ref(c2, s2, w)
+    else:
+        y = _dq.dequant_matmul(c2, s2, w, block_m=bm, block_d=bd,
+                               interpret=interp)
+    return y.reshape(*lead, D)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def rglru_scan_op(a, b, *, interpret: bool | None = None):
+    """Blocked linear recurrence. a, b: [B, S, D] f32."""
+    interp = (not _ON_TPU) if interpret is None else interpret
+    B, S, D = a.shape
+    bs = _pick_block(S, 256, align=8)
+    bd = _pick_block(D, 512)
+    if S % bs or D % bd:
+        return ref.rglru_scan_ref(a, b)
+    return _rs.rglru_scan(a, b, block_s=bs, block_d=bd, interpret=interp)

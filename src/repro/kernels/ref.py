@@ -1,0 +1,43 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def bottleneck_quant_ref(x, w, bits: int = 8):
+    """Fused down-projection + row-wise symmetric int8 quantization.
+
+    x: [M, K] bf16/f32, w: [K, N] -> (codes int8 [M, N], scales f32 [M, 1]).
+    """
+    z = (x.astype(jnp.float32) @ w.astype(jnp.float32))
+    qm = (1 << (bits - 1)) - 1
+    absmax = jnp.max(jnp.abs(z), axis=-1, keepdims=True)
+    scale = jnp.maximum(absmax, 1e-8) / qm
+    codes = jnp.clip(jnp.round(z / scale), -qm, qm).astype(jnp.int8)
+    return codes, scale
+
+
+def dequant_matmul_ref(codes, scales, w, out_dtype=jnp.bfloat16):
+    """Decoder-side fused dequantize + up-projection.
+
+    codes: int8 [M, N], scales: f32 [M, 1], w: [N, D] -> [M, D].
+    """
+    z = codes.astype(jnp.float32) * scales
+    return (z @ w.astype(jnp.float32)).astype(out_dtype)
+
+
+def rglru_scan_ref(a, b):
+    """Gated linear recurrence h_t = a_t * h_{t-1} + b_t, h_0 = b_1 term.
+
+    a, b: [B, S, D] f32 -> h: [B, S, D] f32.
+    """
+    def step(h, ab):
+        at, bt = ab
+        h = at * h + bt
+        return h, h
+
+    B, S, D = a.shape
+    h0 = jnp.zeros((B, D), jnp.float32)
+    _, hs = jax.lax.scan(step, h0, (a.swapaxes(0, 1), b.swapaxes(0, 1)))
+    return hs.swapaxes(0, 1)

@@ -1,0 +1,173 @@
+"""Roofline-term derivation from compiled dry-run artifacts.
+
+  compute    = HLO_FLOPs / (chips x 197 TFLOP/s)
+  memory     = HLO_bytes / (chips x 819 GB/s)
+  collective = collective_bytes / (chips x 50 GB/s)
+
+``cost_analysis`` provides FLOPs/bytes; collective bytes are NOT in
+cost_analysis, so we parse the post-SPMD HLO text and sum the result-shape
+bytes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute op.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, Tuple
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g. "  %foo = f32[128,4096]{1,0} all-reduce(...)", possibly tuple-typed:
+# "(bf16[8,16]{...}, f32[8]{...}) all-reduce(..."
+_OP_RE = re.compile(
+    r"=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s+"
+    r"(" + "|".join(_COLLECTIVES) + r")[-a-z]*\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*(?:\([^)]*\))?\s*->.*\{\s*$")
+_WHILE_RE = re.compile(
+    r"while\(.*?\), condition=%?([\w\.\-]+), body=%?([\w\.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+def _split_computations(hlo_text: str) -> Dict[str, str]:
+    comps: Dict[str, str] = {}
+    name, buf = None, []
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if name is None and s.endswith("{") and "->" in s:
+            head = s[len("ENTRY "):] if s.startswith("ENTRY ") else s
+            name = head.split()[0].lstrip("%")
+            buf = []
+        elif s == "}" and name is not None:
+            comps[name] = "\n".join(buf)
+            name = None
+        elif name is not None:
+            buf.append(line)
+    return comps
+
+
+def _trip_count(cond_body: str) -> int:
+    """lax.scan lowers to a while whose condition compares a counter to a
+    constant — take the max int constant in the condition as the trip count
+    (fallback 1 for dynamic loops)."""
+    consts = [int(c) for c in _CONST_RE.findall(cond_body)
+              if int(c) < 10_000_000]
+    return max(consts) if consts else 1
+
+
+def _comp_multipliers(comps: Dict[str, str], entry: str) -> Dict[str, float]:
+    """Execution-count multiplier per computation, following nested while
+    loops from the entry computation."""
+    mult: Dict[str, float] = {}
+
+    def visit(name: str, m: float):
+        if name not in comps:
+            return
+        mult[name] = mult.get(name, 0.0) + m
+        for wm in _WHILE_RE.finditer(comps[name]):
+            cond, body = wm.group(1), wm.group(2)
+            trips = _trip_count(comps.get(cond, ""))
+            visit(body, m * trips)
+
+    visit(entry, 1.0)
+    return mult
+
+
+def parse_collectives(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Sum result-shape bytes per collective kind (per-device program),
+    multiplying ops inside while-loop bodies (lax.scan) by the loop trip
+    count — XLA lists a loop body once but it executes trip-count times."""
+    comps = _split_computations(hlo_text)
+    entry = None
+    m_entry = re.search(r"^ENTRY\s+%?([\w\.\-]+)", hlo_text, re.M)
+    if m_entry:
+        entry = m_entry.group(1)
+    mults = (_comp_multipliers(comps, entry)
+             if entry and entry in comps else {})
+
+    out: Dict[str, Dict[str, float]] = {
+        k: {"bytes": 0, "count": 0} for k in _COLLECTIVES}
+    if comps:
+        for cname, body in comps.items():
+            mult = mults.get(cname, 1.0 if not mults else 0.0)
+            if mult == 0.0:
+                # unreached computations (e.g. fusions) hold no collectives,
+                # but keep them counted once if they somehow do
+                mult = 1.0 if _OP_RE.search(body) and cname not in mults \
+                    else mult
+            if mult == 0.0:
+                continue
+            for m in _OP_RE.finditer(body):
+                shape_str, kind = m.group(1), m.group(2)
+                out[kind]["bytes"] += _shape_bytes(shape_str) * mult
+                out[kind]["count"] += mult
+    else:
+        for m in _OP_RE.finditer(hlo_text):
+            shape_str, kind = m.group(1), m.group(2)
+            out[kind]["bytes"] += _shape_bytes(shape_str)
+            out[kind]["count"] += 1
+    return out
+
+
+def collective_bytes_total(hlo_text: str) -> int:
+    return int(sum(v["bytes"] for v in parse_collectives(hlo_text).values()))
+
+
+def roofline_terms(flops: float, hbm_bytes: float, coll_bytes: float,
+                   chips: int, *, per_device: bool = True) -> Dict[str, float]:
+    """All inputs are per-device program quantities when per_device=True
+    (XLA cost_analysis and the SPMD HLO are per-device); chips scales the
+    aggregate hardware. Returns seconds per term + dominant."""
+    if per_device:
+        # per-device work over per-chip peak == aggregate over aggregate
+        compute = flops / PEAK_FLOPS_BF16
+        memory = hbm_bytes / HBM_BW
+        collective = coll_bytes / ICI_BW
+    else:
+        compute = flops / (chips * PEAK_FLOPS_BF16)
+        memory = hbm_bytes / (chips * HBM_BW)
+        collective = coll_bytes / (chips * ICI_BW)
+    terms = {"compute_s": compute, "memory_s": memory,
+             "collective_s": collective}
+    terms["dominant"] = max(
+        ("compute_s", "memory_s", "collective_s"), key=lambda k: terms[k])
+    terms["bound_s"] = max(compute, memory, collective)
+    return terms
+
+
+def model_flops_per_step(n_active_params: int, tokens_per_step: int,
+                         kind: str = "train") -> float:
+    """MODEL_FLOPS = 6 N D (train) / 2 N D (inference forward)."""
+    c = 6.0 if kind == "train" else 2.0
+    return c * n_active_params * tokens_per_step
+
+
+def useful_ratio(model_flops: float, hlo_flops_per_device: float,
+                 chips: int) -> float:
+    """MODEL_FLOPS / total HLO FLOPs — how much compiled compute is useful
+    (catches remat/redundancy/dispatch waste)."""
+    total = hlo_flops_per_device * chips
+    return model_flops / total if total else 0.0

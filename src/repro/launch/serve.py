@@ -1,0 +1,130 @@
+"""Production serving launcher: batched requests through the split engine
+with the orchestrator picking the transmit mode per token from a simulated
+mmWave channel trace (the paper's Fig. 3/5 loop, runnable end to end).
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b --reduced \
+        --requests 4 --prompt-len 16 --gen 32
+    PYTHONPATH=src python -m repro.launch.serve --arch xlstm-125m --reduced \
+        --policy static0            # always send the full-width code z
+
+Policies:
+  orchestrator  paper's dynamic policy (channel + loss feedback, hysteresis)
+  static0       always mode 0 (raw boundary, most informative)
+  static1       always mode 1 (bottleneck z', cheapest)
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_config, get_reduced
+from repro.core import bottleneck
+from repro.core import split as SP
+from repro.core.channel import Channel, ChannelConfig, tx_seconds
+from repro.core.orchestrator import AppRequirement, ModeProfile, Orchestrator
+from repro.data import tokens
+from repro.serving.engine import ServingEngine
+from repro.training import checkpoint
+
+
+def build_orchestrator(cfg, batch: int, latency_budget_s: float):
+    """Mode profiles from the analytic payload model (calibration stands in
+    for the cascade validation losses on untrained smoke weights)."""
+    profiles = []
+    for m in range(cfg.split.n_modes):
+        pb = bottleneck.mode_payload_bytes(cfg, batch, 1, m)
+        profiles.append(ModeProfile(mode=m, payload_bytes=pb,
+                                    expected_loss=float(m)))  # DPI ordering
+    return Orchestrator(profiles,
+                        AppRequirement(latency_budget_s=latency_budget_s))
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", required=True, choices=ARCH_IDS)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--requests", type=int, default=4,
+                    help="batch of concurrent requests")
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--cache-len", type=int, default=128)
+    ap.add_argument("--policy", default="orchestrator",
+                    choices=["orchestrator", "static0", "static1"])
+    ap.add_argument("--latency-budget-ms", type=float, default=5.0)
+    ap.add_argument("--channel-seed", type=int, default=0)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--json-out", default=None)
+    args = ap.parse_args(argv)
+
+    cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
+    print(f"== launch.serve {args.arch} "
+          f"({'reduced' if args.reduced else 'FULL'}) "
+          f"batch={args.requests} prompt={args.prompt_len} gen={args.gen} "
+          f"policy={args.policy} ==")
+    params = SP.init_split_params(jax.random.PRNGKey(0), cfg)
+    if args.ckpt:
+        params = checkpoint.restore(args.ckpt, params)
+        print(f"loaded weights from {args.ckpt}")
+
+    orch = None
+    if args.policy == "orchestrator":
+        orch = build_orchestrator(cfg, args.requests,
+                                  args.latency_budget_ms / 1e3)
+    eng = ServingEngine(params, cfg, cache_len=args.cache_len,
+                        batch=args.requests, orchestrator=orch)
+
+    # batched request prompts
+    src = tokens.MarkovTokenSource(cfg, seed=7)
+    prompt = jnp.asarray(
+        src.batch(args.requests, args.prompt_len)["tokens"])
+    chan = Channel(ChannelConfig(seed=args.channel_seed))
+
+    t0 = time.time()
+    logits = eng.prefill(prompt)
+    first = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    t_prefill = time.time() - t0
+
+    if args.policy.startswith("static"):
+        mode = int(args.policy[-1])
+        out, wire = [], 0
+        tok = first
+        for _ in range(args.gen):
+            logits, eng.states, pb = SP.split_decode_step(
+                params, tok, eng.states, jnp.int32(eng.pos), cfg, mode=mode)
+            eng.pos += 1
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            out.append(np.asarray(tok))
+            wire += int(pb)
+        gen = np.concatenate(out, axis=-1)
+        stats = {"tokens": int(gen.size), "wire_bytes": wire,
+                 "mode_counts": {mode: args.gen}}
+    else:
+        gen = eng.decode_tokens(first, args.gen, capacity_bps_fn=chan.step)
+        stats = {"tokens": eng.stats.tokens,
+                 "wire_bytes": eng.stats.wire_bytes,
+                 "mode_counts": eng.stats.mode_counts,
+                 "mode_switches": orch.state.switches}
+    t_total = time.time() - t0
+
+    toks = args.requests * args.gen
+    summary = {
+        "arch": args.arch, "policy": args.policy,
+        "prefill_s": round(t_prefill, 2),
+        "decode_tok_per_s": round(toks / max(t_total - t_prefill, 1e-9), 1),
+        "wire_bytes_per_token": stats["wire_bytes"] / max(toks, 1),
+        **stats,
+    }
+    print(json.dumps(summary, indent=1, default=str))
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump(summary, f, indent=1, default=str)
+    return summary
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+from repro.models import (attention, layers, lstm, moe, rglru, sharding,
+                          transformer, xlstm)
+
+__all__ = ["attention", "layers", "lstm", "moe", "rglru", "sharding",
+           "transformer", "xlstm"]

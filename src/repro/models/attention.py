@@ -1,0 +1,228 @@
+"""GQA multi-head attention with causal / sliding-window masking and a
+decode-time KV cache (rolling buffer for SWA/local-attention archs).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope, dense_init
+
+NEG_INF = -1e30
+
+
+def attn_init(key, d: int, n_q: int, n_kv: int, hd: int, *,
+              qkv_bias: bool = False, dtype=jnp.bfloat16):
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(kq, d, n_q * hd, bias=qkv_bias, dtype=dtype),
+        "wk": dense_init(kk, d, n_kv * hd, bias=qkv_bias, dtype=dtype),
+        "wv": dense_init(kv, d, n_kv * hd, bias=qkv_bias, dtype=dtype),
+        "wo": dense_init(ko, n_q * hd, d, dtype=dtype),
+    }
+
+
+def _project_qkv(p, x, n_q, n_kv, hd):
+    B, S = x.shape[:2]
+    q = (x @ p["wq"]["w"]).reshape(B, S, n_q, hd)
+    k = (x @ p["wk"]["w"]).reshape(B, S, n_kv, hd)
+    v = (x @ p["wv"]["w"]).reshape(B, S, n_kv, hd)
+    if "b" in p["wq"]:
+        q = q + p["wq"]["b"].reshape(n_q, hd)
+        k = k + p["wk"]["b"].reshape(n_kv, hd)
+        v = v + p["wv"]["b"].reshape(n_kv, hd)
+    return q, k, v
+
+
+def _gqa_scores(q, k):
+    """q: [B,S,nq,hd], k: [B,T,nkv,hd] -> [B,nkv,G,S,T] without materializing
+    repeated KV heads."""
+    B, S, n_q, hd = q.shape
+    n_kv = k.shape[2]
+    g = n_q // n_kv
+    qg = q.reshape(B, S, n_kv, g, hd)
+    return jnp.einsum("bskgh,btkh->bkgst", qg.astype(jnp.float32),
+                      k.astype(jnp.float32))
+
+
+def _gqa_out(probs, v):
+    """probs: [B,nkv,G,S,T], v: [B,T,nkv,hd] -> [B,S,nq*hd]."""
+    B, n_kv, g, S, T = probs.shape
+    out = jnp.einsum("bkgst,btkh->bskgh", probs, v.astype(jnp.float32))
+    return out.reshape(B, S, n_kv * g * v.shape[-1])
+
+
+# sequences at or above this length use the blocked online-softmax path
+# (bounded memory — the pure-JAX analogue of flash/splash attention, which is
+# what a real TPU deployment would run for 32k prefill)
+BLOCKED_ATTN_THRESHOLD = 2048
+_BLOCK_Q = 512
+_BLOCK_K = 512
+
+
+def _dense_attention(q, k, v, positions, hd, window):
+    scores = _gqa_scores(q, k) / math.sqrt(hd)   # [B,kv,G,S,T] fp32
+    i = positions[:, None, None, :, None]        # query pos
+    j = positions[:, None, None, None, :]        # key pos
+    mask = j <= i
+    if window:
+        mask &= j > i - window
+    scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return _gqa_out(probs, v)
+
+
+def _blocked_attention(q, k, v, positions, hd, window,
+                       block_q: int = _BLOCK_Q, block_k: int = _BLOCK_K):
+    """Online-softmax attention over [block_q x block_k] tiles; peak memory
+    is O(S * block_k) instead of O(S^2)."""
+    B, S, n_q_heads, _ = q.shape
+    n_kv = k.shape[2]
+    g = n_q_heads // n_kv
+    nq, nk = S // block_q, S // block_k
+    qb = q.reshape(B, nq, block_q, n_kv, g, hd)
+    kb = k.reshape(B, nk, block_k, n_kv, hd)
+    vb = v.reshape(B, nk, block_k, n_kv, hd)
+    pos_q = positions.reshape(B, nq, block_q)
+    pos_k = positions.reshape(B, nk, block_k)
+    scale = 1.0 / math.sqrt(hd)
+
+    def q_block(qi, q_i, pq_i):
+        # q_i: [B, block_q, n_kv, g, hd]; pq_i: [B, block_q]
+        qf = q_i.astype(jnp.float32)
+
+        def kv_step(carry, inp):
+            m, l, acc = carry
+            k_j, v_j, pk_j = inp                 # [B,block_k,n_kv,hd], pos
+            s = jnp.einsum("bqkgh,btkh->bkgqt", qf,
+                           k_j.astype(jnp.float32)) * scale
+            i_ = pq_i[:, None, None, :, None]
+            j_ = pk_j[:, None, None, None, :]
+            mask = j_ <= i_
+            if window:
+                mask &= j_ > i_ - window
+            s = jnp.where(mask, s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + jnp.sum(p, axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bkgqt,btkh->bkgqh", p, v_j.astype(jnp.float32))
+            return (m_new, l, acc), None
+
+        m0 = jnp.full((B, n_kv, g, block_q), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, n_kv, g, block_q), jnp.float32)
+        a0 = jnp.zeros((B, n_kv, g, block_q, hd), jnp.float32)
+        kv_xs = (kb.swapaxes(0, 1), vb.swapaxes(0, 1), pos_k.swapaxes(0, 1))
+        step = jax.checkpoint(kv_step,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+        (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), kv_xs)
+        out = acc / jnp.maximum(l, 1e-30)[..., None]   # [B,kv,g,bq,hd]
+        return out.transpose(0, 3, 1, 2, 4).reshape(B, block_q, n_kv * g * hd)
+
+    outs = jax.lax.map(
+        lambda i: q_block(i, qb[:, i], pos_q[:, i]), jnp.arange(nq))
+    # [nq, B, block_q, n_heads*hd] -> [B, S, n_heads*hd]
+    return outs.swapaxes(0, 1).reshape(B, S, n_q_heads * hd)
+
+
+def full_attention(p, x, positions, *, n_q: int, n_kv: int, hd: int,
+                   rope_theta: float, window: int = 0):
+    """Train / prefill path: full causal (optionally sliding-window) attention.
+
+    x: [B, S, d]; positions: [B, S] absolute token positions.
+    """
+    S = x.shape[1]
+    q, k, v = _project_qkv(p, x, n_q, n_kv, hd)
+    q = apply_rope(q, positions, rope_theta)
+    k = apply_rope(k, positions, rope_theta)
+
+    if S >= BLOCKED_ATTN_THRESHOLD and S % _BLOCK_Q == 0 \
+            and S % _BLOCK_K == 0:
+        out = _blocked_attention(q, k, v, positions, hd, window)
+    else:
+        out = _dense_attention(q, k, v, positions, hd, window)
+    return out.astype(x.dtype) @ p["wo"]["w"]
+
+
+def init_cache(batch: int, n_kv: int, hd: int, cache_len: int,
+               dtype=jnp.bfloat16, kv_bits: int = 0):
+    """Per-layer rolling KV cache. ``cache_len`` = window for SWA archs,
+    full context otherwise.
+
+    ``kv_bits=8``: store int8 codes + per-(pos, head) fp32 scales instead of
+    bf16 — halves the decode memory-roofline term, which dominates the
+    32k-decode shapes (EXPERIMENTS.md §Perf decode addendum). The decode
+    path dispatches on the presence of the scale leaves."""
+    if kv_bits == 0:
+        return {
+            "k": jnp.zeros((batch, cache_len, n_kv, hd), dtype=dtype),
+            "v": jnp.zeros((batch, cache_len, n_kv, hd), dtype=dtype),
+        }
+    assert kv_bits == 8, kv_bits
+    return {
+        "k": jnp.zeros((batch, cache_len, n_kv, hd), dtype=jnp.int8),
+        "k_s": jnp.zeros((batch, cache_len, n_kv, 1), dtype=jnp.float32),
+        "v": jnp.zeros((batch, cache_len, n_kv, hd), dtype=jnp.int8),
+        "v_s": jnp.zeros((batch, cache_len, n_kv, 1), dtype=jnp.float32),
+    }
+
+
+def decode_attention(p, x, cache, cur_pos, *, n_q: int, n_kv: int, hd: int,
+                     rope_theta: float, window: int = 0):
+    """One-token decode against the cache.
+
+    x: [B, 1, d]; cur_pos: scalar int32 — absolute position of the new token
+    (all sequences aligned, as in synchronous batched serving).
+    Returns (out [B,1,d], updated cache).
+    """
+    B = x.shape[0]
+    cache_len = cache["k"].shape[1]
+    q, k, v = _project_qkv(p, x, n_q, n_kv, hd)
+    pos = jnp.full((B, 1), cur_pos, dtype=jnp.int32)
+    q = apply_rope(q, pos, rope_theta)
+    k = apply_rope(k, pos, rope_theta)
+
+    slot = jnp.mod(cur_pos, cache_len)            # rolling for SWA
+    quantized = "k_s" in cache
+    if quantized:
+        from repro.core import quant as Q
+        kq, ks = Q.quantize(k, 8)
+        vq, vs = Q.quantize(v, 8)
+        new_cache = {
+            "k": jax.lax.dynamic_update_slice_in_dim(cache["k"], kq, slot,
+                                                     axis=1),
+            "k_s": jax.lax.dynamic_update_slice_in_dim(cache["k_s"], ks,
+                                                       slot, axis=1),
+            "v": jax.lax.dynamic_update_slice_in_dim(cache["v"], vq, slot,
+                                                     axis=1),
+            "v_s": jax.lax.dynamic_update_slice_in_dim(cache["v_s"], vs,
+                                                       slot, axis=1),
+        }
+        ck = (new_cache["k"].astype(jnp.float32) * new_cache["k_s"]
+              ).astype(k.dtype)
+        cv = (new_cache["v"].astype(jnp.float32) * new_cache["v_s"]
+              ).astype(v.dtype)
+    else:
+        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot, axis=1)
+
+    scores = _gqa_scores(q, ck) / math.sqrt(hd)   # [B,kv,G,1,T]
+    # slot t holds absolute position: t if t<=slot else t + cache_len*(n_wraps)
+    # validity: a slot is attendable iff its absolute position is in
+    # (cur_pos - effective_window, cur_pos].
+    t = jnp.arange(cache_len)
+    n_fill = jnp.minimum(cur_pos + 1, cache_len)  # number of valid slots
+    written = t < n_fill if window == 0 else jnp.ones_like(t, dtype=bool)
+    if window:
+        # with rolling cache of size cache_len == min(window, ctx) every
+        # written slot is within the window by construction
+        written = t < n_fill
+    scores = jnp.where(written[None, None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = _gqa_out(probs, cv).astype(x.dtype)
+    return out @ p["wo"]["w"], (new_cache if quantized
+                                else {"k": ck, "v": cv})

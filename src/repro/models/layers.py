@@ -1,0 +1,122 @@
+"""Shared neural-network building blocks (pure JAX, functional style).
+
+Every module follows the ``init(key, ...) -> params`` / ``apply(params, x)``
+convention; params are plain dicts of jnp arrays so they compose into pytrees
+that pjit/shard_map can shard.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+def _normal(key, shape, scale, dtype):
+    return (scale * jax.random.normal(key, shape, dtype=jnp.float32)).astype(dtype)
+
+
+def dense_init(key, d_in: int, d_out: int, *, bias: bool = False,
+               dtype=jnp.bfloat16, scale: Optional[float] = None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    p = {"w": _normal(key, (d_in, d_out), scale, dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype=dtype)
+    return p
+
+
+def dense_apply(p, x):
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def embed_init(key, vocab: int, d: int, *, dtype=jnp.bfloat16):
+    return {"table": _normal(key, (vocab, d), 1.0, dtype)}
+
+
+def embed_apply(p, ids):
+    return jnp.take(p["table"], ids, axis=0)
+
+
+def embed_logits(p, x):
+    """Tied read-out: x @ table^T (fp32 accumulation for the softmax)."""
+    return jnp.einsum("...d,vd->...v", x.astype(jnp.float32),
+                      p["table"].astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def norm_init(d: int, kind: str = "rmsnorm", *, dtype=jnp.bfloat16):
+    p = {"scale": jnp.ones((d,), dtype=dtype)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((d,), dtype=dtype)
+    return p
+
+
+def norm_apply(p, x, kind: str = "rmsnorm", eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    else:  # layernorm
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    y = y * p["scale"].astype(jnp.float32)
+    if "bias" in p:
+        y = y + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# gated MLP (llama-style)
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, d: int, d_ff: int, *, dtype=jnp.bfloat16):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, d, d_ff, dtype=dtype),
+        "w_up": dense_init(k2, d, d_ff, dtype=dtype),
+        "w_down": dense_init(k3, d_ff, d, dtype=dtype),
+    }
+
+
+def _act(x, kind: str):
+    if kind == "silu":
+        return jax.nn.silu(x)
+    if kind == "gelu":
+        return jax.nn.gelu(x)
+    raise ValueError(f"unknown activation {kind!r}")
+
+
+def mlp_apply(p, x, act: str = "silu"):
+    g = _act(dense_apply(p["w_gate"], x), act)
+    u = dense_apply(p["w_up"], x)
+    return dense_apply(p["w_down"], g * u)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def apply_rope(x, positions, theta: float = 10_000.0):
+    """x: [..., S, H, hd]; positions: broadcastable to [..., S]."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = jnp.exp(-jnp.arange(0, half, dtype=jnp.float32)
+                    * (math.log(theta) / half))
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [..., S, half]
+    cos = jnp.cos(ang)[..., None, :]   # [..., S, 1, half]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin],
+                          axis=-1)
+    return out.astype(x.dtype)

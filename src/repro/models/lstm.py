@@ -1,0 +1,137 @@
+"""The paper's proof-of-concept model (Fig. 6): LSTM encoder +
+time-distributed Dense decoder, with the phase-2 bottleneck LSTM and decoder
+adapter layer of Algorithm 1.
+
+Mode 0 ("z"):  x -> LSTM1 -> LSTM2 -> z = H_T^(2) -> Decoder1
+Mode 1 ("z'"): x -> LSTM1 -> LSTM2 -> LSTM3(bottleneck) -> z' = H_T^(3)
+               -> adapter (layer B) -> Decoder1
+
+The decoder tiles the received latent across T timesteps and applies
+time-distributed dense layers producing a per-timestep throughput class
+(tanh hidden activation — the double-saturating family the IB literature
+associates with the compression phase).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LSTMConfig
+from repro.models.layers import dense_apply, dense_init
+
+
+# ---------------------------------------------------------------------------
+# LSTM cell / layer
+# ---------------------------------------------------------------------------
+
+def lstm_layer_init(key, d_in: int, d_hidden: int, dtype=jnp.float32):
+    k1, k2 = jax.random.split(key)
+    return {
+        "wx": dense_init(k1, d_in, 4 * d_hidden, bias=True, dtype=dtype),
+        "wh": dense_init(k2, d_hidden, 4 * d_hidden, dtype=dtype),
+    }
+
+
+def lstm_layer_apply(p, x):
+    """x: [B,S,d_in] -> all hidden states [B,S,d_hidden]."""
+    B, S, _ = x.shape
+    dh = p["wh"]["w"].shape[0]
+    xw = dense_apply(p["wx"], x)                   # [B,S,4dh]
+
+    def step(carry, xw_t):
+        h, c = carry
+        z = xw_t + h @ p["wh"]["w"]
+        i, f, g, o = jnp.split(z, 4, axis=-1)
+        c = jax.nn.sigmoid(f) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+        h = jax.nn.sigmoid(o) * jnp.tanh(c)
+        return (h, c), h
+
+    init = (jnp.zeros((B, dh), x.dtype), jnp.zeros((B, dh), x.dtype))
+    _, hs = jax.lax.scan(step, init, xw.swapaxes(0, 1))
+    return hs.swapaxes(0, 1)                       # [B,S,dh]
+
+
+# ---------------------------------------------------------------------------
+# paper model
+# ---------------------------------------------------------------------------
+
+def init_params(key, cfg: LSTMConfig) -> Dict:
+    ks = jax.random.split(key, 8)
+    params: Dict = {"enc": [], "dec": []}
+    d_in = cfg.n_features
+    for i, n in enumerate(cfg.enc_cells):
+        params["enc"].append(lstm_layer_init(ks[i], d_in, n))
+        d_in = n
+    z_dim = cfg.enc_cells[-1]
+    d = z_dim
+    for i, n in enumerate(cfg.dec_hidden):
+        params["dec"].append(dense_init(ks[3 + i], d, n, bias=True,
+                                        dtype=jnp.float32))
+        d = n
+    params["dec_out"] = dense_init(ks[5], d, cfg.n_classes, bias=True,
+                                   dtype=jnp.float32)
+    # phase-2 additions (Algorithm 1 lines 3-4): bottleneck LSTM (layer A)
+    # + decoder adapter (layer B) mapping z' back to Decoder1's input width.
+    params["bneck"] = lstm_layer_init(ks[6], z_dim, cfg.bottleneck_cells)
+    params["adapter"] = dense_init(ks[7], cfg.bottleneck_cells, z_dim,
+                                   bias=True, dtype=jnp.float32)
+    return params
+
+
+def encoder_apply(params, x, mode: int) -> Tuple[jnp.ndarray, Dict]:
+    """Returns (latent code [B, z_dim], activations dict for IB analysis)."""
+    acts = {}
+    h = x
+    for i, layer in enumerate(params["enc"]):
+        h = lstm_layer_apply(layer, h)
+        acts[f"H{i + 1}"] = h                      # [B,S,cells]
+    z = h[:, -1, :]                                # H_T^(2)
+    if mode == 0:
+        return z, acts
+    h3 = lstm_layer_apply(params["bneck"], h)
+    acts["H3"] = h3
+    zp = h3[:, -1, :]                              # z' = H_T^(3)
+    return zp, acts
+
+
+def decoder_apply(params, latent, seq_len: int, mode: int) -> jnp.ndarray:
+    """latent: mode 0 -> z [B, z_dim]; mode 1 -> z' [B, bneck]."""
+    if mode == 1:
+        latent = jnp.tanh(dense_apply(params["adapter"], latent))  # layer B
+    h = jnp.repeat(latent[:, None, :], seq_len, axis=1)            # tile T
+    for layer in params["dec"]:
+        h = jnp.tanh(dense_apply(layer, h))
+    return dense_apply(params["dec_out"], h)       # [B,S,n_classes]
+
+
+def forward(params, x, cfg: LSTMConfig, mode: int = 0):
+    z, acts = encoder_apply(params, x, mode)
+    logits = decoder_apply(params, z, cfg.seq_len, mode)
+    acts["latent"] = z
+    acts["logits"] = logits
+    return logits, acts
+
+
+def loss_fn(params, batch, cfg: LSTMConfig, mode: int = 0):
+    logits, _ = forward(params, batch["x"], cfg, mode)
+    labels = batch["y"]                            # [B,S] int
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    acc = jnp.mean(jnp.argmax(logits, -1) == labels)
+    return jnp.mean(nll), {"acc": acc}
+
+
+# Algorithm 1 freeze partition: phase 1 trains enc/dec/dec_out;
+# phase 2 trains ONLY bneck + adapter.
+PHASE1_KEYS = ("enc", "dec", "dec_out")
+PHASE2_KEYS = ("bneck", "adapter")
+
+
+def phase_mask(params, phase: int):
+    """Pytree of bools: True = trainable in this phase."""
+    def mark(key_name, sub):
+        trainable = (key_name in (PHASE1_KEYS if phase == 1 else PHASE2_KEYS))
+        return jax.tree.map(lambda _: trainable, sub)
+    return {k: mark(k, v) for k, v in params.items()}

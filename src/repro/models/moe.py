@@ -1,0 +1,86 @@
+"""GShard-style mixture-of-experts layer (top-k router, capacity-based
+dispatch/combine einsums).
+
+The dispatch/combine formulation is the TPU-native realization: expert weights
+carry a leading E dim that shards over the ``model`` mesh axis, so the
+dispatch einsum lowers to the expert-parallel all-to-all.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import sharding
+from repro.models.layers import _act, _normal
+
+
+def moe_init(key, d: int, d_ff: int, n_experts: int, *, dtype=jnp.bfloat16):
+    kr, kg, ku, kd = jax.random.split(key, 4)
+    scale_in = 1.0 / jnp.sqrt(d).item() if False else d ** -0.5
+    return {
+        "router": {"w": _normal(kr, (d, n_experts), d ** -0.5, jnp.float32)},
+        "w_gate": _normal(kg, (n_experts, d, d_ff), d ** -0.5, dtype),
+        "w_up": _normal(ku, (n_experts, d, d_ff), d ** -0.5, dtype),
+        "w_down": _normal(kd, (n_experts, d_ff, d), d_ff ** -0.5, dtype),
+    }
+
+
+def moe_apply(p, x, *, k: int, act: str = "silu",
+              capacity_factor: float = 1.25,
+              group_size: int = 0) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: [B, S, d]  ->  (y [B, S, d], aux_loss scalar).
+
+    Tokens are routed within groups (default: one group per batch row;
+    ``group_size`` splits rows further — smaller groups cut the quadratic
+    dispatch-einsum cost, a hillclimb knob).
+    """
+    B, S, d = x.shape
+    E = p["w_gate"].shape[0]
+    if group_size and S % group_size == 0 and S > group_size:
+        g = S // group_size
+        xg = x.reshape(B * g, group_size, d)
+    else:
+        xg = x
+    G, N, _ = xg.shape
+
+    logits = xg.astype(jnp.float32) @ p["router"]["w"]          # [G,N,E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, k)                        # [G,N,k]
+    gates = gates / jnp.sum(gates, axis=-1, keepdims=True)      # renormalize
+
+    cap = max(int(capacity_factor * k * N / E), 1)
+
+    # one-hot expert choice per (token, slot): [G, N, k, E]
+    onehot = jax.nn.one_hot(idx, E, dtype=jnp.float32)
+    # position of each (token, slot) inside its expert buffer, priority by
+    # (token index, slot index):
+    flat = onehot.reshape(G, N * k, E)
+    pos = jnp.cumsum(flat, axis=1) - flat                       # [G,N*k,E]
+    pos = pos.reshape(G, N, k, E)
+    keep = (pos < cap) & (onehot > 0)
+    pos_oh = jax.nn.one_hot(pos.astype(jnp.int32), cap, dtype=jnp.float32)
+    # dispatch [G,N,E,C] (bool-ish), combine [G,N,E,C] (gate-weighted)
+    dispatch = jnp.einsum("gnke,gnkec->gnec", onehot * keep, pos_oh)
+    combine = jnp.einsum("gnk,gnke,gnkec->gnec", gates, onehot * keep, pos_oh)
+
+    # NOTE: annotating xin/out with an expert-sharded constraint here was
+    # tried and REFUTED (EXPERIMENTS.md §Perf pair B iter 2): GSPMD lowers
+    # the combine side to a full expert-output all-gather (610 GiB/dev).
+    # The einsum formulation is kept as the portable fallback; the fast
+    # path is the explicit shard_map schedule in ``moe_ep.py``.
+    xin = jnp.einsum("gnec,gnd->gecd", dispatch, xg.astype(jnp.float32))
+    xin = xin.astype(p["w_gate"].dtype)                         # [G,E,C,d]
+    h = _act(jnp.einsum("gecd,edf->gecf", xin, p["w_gate"]), act) \
+        * jnp.einsum("gecd,edf->gecf", xin, p["w_up"])
+    out = jnp.einsum("gecf,efd->gecd", h, p["w_down"])          # [G,E,C,d]
+    y = jnp.einsum("gnec,gecd->gnd", combine, out.astype(jnp.float32))
+
+    # Switch/GShard load-balance auxiliary loss
+    frac_tokens = jnp.mean(onehot[..., 0, :] if k == 1 else
+                           jnp.max(onehot, axis=2), axis=1)     # [G,E]
+    frac_probs = jnp.mean(probs, axis=1)                        # [G,E]
+    aux = E * jnp.mean(jnp.sum(frac_tokens * frac_probs, axis=-1))
+
+    return y.reshape(B, S, d).astype(x.dtype), aux

@@ -1,0 +1,142 @@
+"""Expert-parallel MoE with an explicit all-to-all schedule (shard_map).
+
+The einsum dispatch in ``moe.py`` lets GSPMD pick the collectives, and on a
+(data, model) mesh it picks badly: the combine side all-gathers every
+expert's output over ``model`` (measured 610 GiB/device for phi3.5-moe
+train_4k — EXPERIMENTS.md §Perf pair B, iteration 2, hypothesis refuted).
+
+This module pins the schedule manually:
+
+  tokens shard as (batch over the dp axes) x (sequence over ``model``);
+  experts shard over ``model``. Per chip and per MoE layer:
+
+    route local N tokens -> build send buffer [E, C, d]
+    all_to_all over `model`  (dispatch — bytes = E*C*d, the roofline floor)
+    local expert FFN          (weights local, no gather)
+    all_to_all back           (combine)
+    scatter-add into y with gate weights
+
+  per-device collective bytes/layer = 2 * E * C * d * bytes(dtype)
+  with C = ceil(cf * k * N_loc / E) — independent of the expert count's
+  total parameter bytes, which is the point.
+
+Requires E % m == 0, batch % dp == 0, seq % m == 0 (m = model-axis size);
+``moe_supports_ep`` guards the fast path, callers fall back to the einsum
+formulation otherwise (e.g. mixtral's 8 experts on a 16-wide model axis).
+Capacity groups are per-chip token blocks (B/dp x S/m tokens), so drop
+behaviour matches the einsum path whenever the grouping coincides and is
+the same in expectation otherwise.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.layers import _act
+
+
+def _dp_size(mesh) -> int:
+    n = 1
+    for a, v in mesh.shape.items():
+        if a != "model":
+            n *= v
+    return n
+
+
+def moe_supports_ep(n_experts: int, mesh, batch: int, seq: int) -> bool:
+    """Tokens shard as batch over the dp axes x sequence over `model`."""
+    if mesh is None or "model" not in mesh.shape:
+        return False
+    ep = mesh.shape["model"]
+    return (n_experts % ep == 0 and batch % _dp_size(mesh) == 0
+            and seq % ep == 0)
+
+
+def _route_local(router_w, xg, k: int, capacity: int, n_experts: int):
+    """Local top-k routing with capacity. xg: [N, d] (one chip's tokens).
+    Returns (gates [N,k], expert idx [N,k], slot [N,k], keep [N,k], aux)."""
+    logits = xg.astype(jnp.float32) @ router_w                   # [N, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, k)                         # [N, k]
+    gates = gates / jnp.sum(gates, axis=-1, keepdims=True)
+
+    onehot = jax.nn.one_hot(idx, n_experts, dtype=jnp.float32)   # [N,k,E]
+    flat = onehot.reshape(-1, n_experts)                         # [N*k, E]
+    pos = (jnp.cumsum(flat, axis=0) - flat).reshape(onehot.shape)
+    slot = jnp.einsum("nke,nke->nk", pos, onehot).astype(jnp.int32)
+    keep = slot < capacity
+
+    frac_tokens = jnp.mean(jnp.max(onehot, axis=1), axis=0)      # [E]
+    frac_probs = jnp.mean(probs, axis=0)                         # [E]
+    aux = n_experts * jnp.sum(frac_tokens * frac_probs)
+    return gates, idx, slot, keep, aux
+
+
+def moe_apply_ep(p, x, *, k: int, act: str = "silu",
+                 capacity_factor: float = 1.25,
+                 mesh=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Drop-in for ``moe_apply`` under a (pod?, data, model) mesh.
+
+    x: [B, S, d] global. Output matches the einsum path up to dropped-token
+    tie-breaking order (tests compare allclose on capacity-slack configs).
+    """
+    B, S, d = x.shape
+    E = p["w_gate"].shape[0]
+    ep = mesh.shape["model"]
+    e_loc = E // ep
+    dp = tuple(a for a in mesh.shape if a != "model")
+    n_loc = (B // _dp_size(mesh)) * (S // ep)
+    cap = max(int(capacity_factor * k * n_loc / E), 1)
+    wdtype = p["w_gate"].dtype
+
+    def inner(router_w, w_gate, w_up, w_down, x_loc):
+        # x_loc: [B/dp, S/ep, d]; expert weights local: [e_loc, d, f]
+        xg = x_loc.reshape(-1, d)                                # [N, d]
+        gates, idx, slot, keep, aux = _route_local(router_w, xg, k, cap, E)
+
+        # ---- build send buffer [E, cap, d] ----
+        send = jnp.zeros((E, cap, d), wdtype)
+        tok = jnp.broadcast_to(jnp.arange(xg.shape[0])[:, None], idx.shape)
+        e_idx = jnp.where(keep, idx, E)          # overflow -> OOB row drop
+        send = send.at[e_idx.reshape(-1),
+                       jnp.where(keep, slot, 0).reshape(-1)].set(
+            xg[tok.reshape(-1)].astype(wdtype), mode="drop")
+
+        # ---- dispatch a2a: [E, cap, d] -> [ep, e_loc, cap, d] ----
+        recv = jax.lax.all_to_all(
+            send.reshape(ep, e_loc, cap, d), "model", 0, 0, tiled=True)
+        # recv: [ep * e_loc, cap, d] where the leading dim interleaves
+        # (source chip, local expert)
+        recv = recv.reshape(ep, e_loc, cap, d)
+
+        # ---- local expert FFN ----
+        h = jnp.einsum("pecd,edf->pecf", recv, w_gate)
+        h = _act(h, act) * jnp.einsum("pecd,edf->pecf", recv, w_up)
+        out = jnp.einsum("pecf,efd->pecd", h, w_down)            # [ep,e_loc,cap,d]
+
+        # ---- combine a2a back: each source chip gets its tokens ----
+        back = jax.lax.all_to_all(
+            out.reshape(ep * e_loc, cap, d), "model", 0, 0, tiled=True)
+        back = back.reshape(E, cap, d)                           # my tokens
+
+        # ---- weighted scatter back to token order ----
+        vals = back[e_idx.reshape(-1),
+                    jnp.where(keep, slot, 0).reshape(-1)]        # [N*k, d]
+        vals = vals.reshape(*idx.shape, d) * \
+            jnp.where(keep, gates, 0.0).astype(wdtype)[..., None]
+        y = jnp.sum(vals, axis=1)                                # [N, d]
+
+        aux = jax.lax.pmean(aux, dp + ("model",))
+        return y.reshape(x_loc.shape).astype(x_loc.dtype), aux
+
+    shmap = jax.shard_map(
+        inner, mesh=mesh,
+        in_specs=(P(), P("model"), P("model"), P("model"),
+                  P(dp, "model", None)),
+        out_specs=(P(dp, "model", None), P()),
+        check_vma=False)
+    return shmap(p["router"]["w"], p["w_gate"], p["w_up"], p["w_down"], x)

@@ -1,0 +1,109 @@
+"""Griffin / RecurrentGemma recurrent block: gated-linear-unit wrapper around
+the RG-LRU (real-gated linear recurrent unit) with a short causal depthwise
+conv [arXiv:2402.19427].
+
+Full-sequence path uses ``jax.lax.associative_scan`` (log-depth, TPU-friendly);
+decode is a single recurrence step with carried state. The Pallas kernel in
+``repro.kernels.rglru_scan`` provides the blocked-VMEM version of the same
+recurrence; this module is the jnp reference path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_apply, dense_init, _normal
+from repro.models.scan_utils import chunked_scan
+
+_C = 8.0          # RG-LRU gate exponent constant
+_CONV_W = 4       # temporal conv width
+
+
+def rglru_init(key, d: int, d_rnn: int, *, dtype=jnp.bfloat16):
+    k1, k2, k3, k4, k5, k6, k7 = jax.random.split(key, 7)
+    # Λ init so that a = sigmoid(Λ) ∈ (0.9, 0.999) as in the paper
+    lam = jnp.log(jnp.linspace(0.9, 0.999, d_rnn)) \
+        - jnp.log1p(-jnp.linspace(0.9, 0.999, d_rnn))
+    return {
+        "in_gate": dense_init(k1, d, d_rnn, dtype=dtype),       # GLU gate branch
+        "in_rec": dense_init(k2, d, d_rnn, dtype=dtype),        # recurrence branch
+        "conv": _normal(k3, (_CONV_W, d_rnn), _CONV_W ** -0.5, dtype),
+        "w_a": dense_init(k4, d_rnn, d_rnn, bias=True, dtype=dtype),
+        "w_x": dense_init(k5, d_rnn, d_rnn, bias=True, dtype=dtype),
+        "lam": lam.astype(jnp.float32),
+        "out": dense_init(k6, d_rnn, d, dtype=dtype),
+    }
+
+
+def _gates(p, u):
+    """u: [..., d_rnn] fp32 -> (log_a, gated input) both fp32."""
+    r = jax.nn.sigmoid(dense_apply(p["w_a"], u).astype(jnp.float32))
+    i = jax.nn.sigmoid(dense_apply(p["w_x"], u).astype(jnp.float32))
+    log_a = _C * r * (-jax.nn.softplus(-p["lam"]))  # log sigmoid(Λ) = -softplus(-Λ)
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * u.astype(jnp.float32))
+    return a, b
+
+
+def _causal_conv(p, u):
+    """Depthwise causal conv width 4 over time. u: [B,S,d_rnn]."""
+    w = p["conv"].astype(jnp.float32)
+    pad = jnp.pad(u, ((0, 0), (_CONV_W - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + u.shape[1], :] * w[i] for i in range(_CONV_W))
+    return out
+
+
+def rglru_full(p, x, *, act: str = "gelu", use_assoc_scan: bool = False):
+    """Full-sequence Griffin recurrent block. x: [B,S,d] -> [B,S,d].
+
+    Default path: chunked sequential scan (saved state = one carry per chunk,
+    mirroring the VMEM-carry structure of the Pallas ``rglru_scan`` kernel).
+    ``use_assoc_scan``: log-depth associative scan — lower latency on real
+    hardware but O(S log S) rematerialization in the backward pass (perf
+    knob, see EXPERIMENTS.md §Perf).
+    """
+    gate = jax.nn.gelu(dense_apply(p["in_gate"], x))
+    u = dense_apply(p["in_rec"], x).astype(jnp.float32)
+    u = _causal_conv(p, u)
+    a, b = _gates(p, u)
+
+    if use_assoc_scan:
+        def combine(l, r):
+            al, bl = l
+            ar, br = r
+            return al * ar, ar * bl + br
+
+        _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    else:
+        def cell(carry, ab):
+            at, bt = ab
+            hh = at * carry + bt
+            return hh, hh
+
+        B, S, dr = a.shape
+        _, h = chunked_scan(cell, jnp.zeros((B, dr), jnp.float32),
+                            (a.swapaxes(0, 1), b.swapaxes(0, 1)))
+        h = h.swapaxes(0, 1)
+    y = (h.astype(x.dtype) * gate)
+    return dense_apply(p["out"], y)
+
+
+def rglru_state_init(batch: int, d_rnn: int, dtype=jnp.float32):
+    return {
+        "h": jnp.zeros((batch, d_rnn), dtype=jnp.float32),
+        "conv": jnp.zeros((batch, _CONV_W - 1, d_rnn), dtype=dtype),
+    }
+
+
+def rglru_step(p, x, state, *, act: str = "gelu"):
+    """One decode step. x: [B,1,d]; returns (y [B,1,d], new state)."""
+    gate = jax.nn.gelu(dense_apply(p["in_gate"], x))            # [B,1,dr]
+    u = dense_apply(p["in_rec"], x).astype(jnp.float32)         # [B,1,dr]
+    hist = jnp.concatenate([state["conv"].astype(jnp.float32), u], axis=1)
+    w = p["conv"].astype(jnp.float32)
+    u_c = jnp.einsum("btd,td->bd", hist, w)[:, None, :]         # [B,1,dr]
+    a, b = _gates(p, u_c)
+    h = a[:, 0] * state["h"] + b[:, 0]                          # [B,dr]
+    y = (h[:, None, :].astype(x.dtype) * gate)
+    new_state = {"h": h, "conv": hist[:, 1:, :].astype(state["conv"].dtype)}
+    return dense_apply(p["out"], y), new_state

@@ -1,0 +1,39 @@
+"""Chunked-remat time scans for recurrent blocks.
+
+A naive ``lax.scan`` over T timesteps saves every per-step intermediate for
+the backward pass — for mLSTM that is the [B,H,hd,hd] matrix memory PER STEP
+(terabytes at train_4k scale). Chunking the scan and rematerializing inside
+each chunk bounds the saved state to one recurrent state per chunk, which is
+the standard TPU memory/recompute tradeoff (and mirrors what the Pallas
+rglru kernel does in VMEM).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def chunked_scan(cell: Callable, state0, xs, *, chunk: int = 256):
+    """scan(cell, state0, xs) with per-chunk remat.
+
+    cell(state, x_t) -> (state, y_t); xs leaves have leading dim T.
+    Saved residuals: one recurrent state per chunk instead of per step.
+    """
+    T = jax.tree.leaves(xs)[0].shape[0]
+    if T <= chunk or T % chunk != 0:
+        return jax.lax.scan(cell, state0, xs)
+    n = T // chunk
+    xs_c = jax.tree.map(
+        lambda a: a.reshape((n, chunk) + a.shape[1:]), xs)
+
+    @jax.checkpoint
+    def outer(state, xc):
+        return jax.lax.scan(cell, state, xc)
+
+    state, ys = jax.lax.scan(outer, state0, xs_c)
+    ys = jax.tree.map(
+        lambda a: a.reshape((T,) + a.shape[2:]), ys)
+    return state, ys

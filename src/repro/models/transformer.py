@@ -1,0 +1,330 @@
+"""Unified decoder-only transformer covering all assigned architecture
+families (dense / MoE / VLM / audio / hybrid RG-LRU / xLSTM).
+
+Homogeneous attention stacks (dense, moe, vlm, audio) use stacked layer
+params + ``jax.lax.scan`` with per-layer remat; heterogeneous block patterns
+(recurrentgemma, xlstm) use an unrolled loop over per-layer param tuples.
+
+The split-learning machinery in ``repro.core.split`` slices the same layer
+params into encoder/decoder halves, so every forward path here is expressed
+through ``run_layers`` / ``run_layers_decode``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import sharding
+from repro.models.attention import (attn_init, decode_attention, full_attention,
+                                    init_cache)
+from repro.models.layers import (dense_apply, dense_init, embed_apply,
+                                 embed_init, mlp_apply, mlp_init, norm_apply,
+                                 norm_init)
+from repro.models.moe import moe_apply, moe_init
+from repro.models.moe_ep import moe_apply_ep, moe_supports_ep
+from repro.models.rglru import (rglru_full, rglru_init, rglru_state_init,
+                                rglru_step)
+from repro.models.xlstm import (mlstm_full, mlstm_init, mlstm_state_init,
+                                mlstm_step, slstm_full, slstm_init,
+                                slstm_state_init, slstm_step)
+
+_DTYPES = {"bfloat16": jnp.bfloat16, "float32": jnp.float32}
+
+
+def model_dtype(cfg: ModelConfig):
+    return _DTYPES[cfg.dtype]
+
+
+# ---------------------------------------------------------------------------
+# per-block init / apply
+# ---------------------------------------------------------------------------
+
+def block_init(key, cfg: ModelConfig, kind: str):
+    dt = model_dtype(cfg)
+    k1, k2, k3 = jax.random.split(key, 3)
+    p: Dict[str, Any] = {"norm1": norm_init(cfg.d_model, cfg.norm, dtype=dt)}
+    if kind == "attn":
+        p["mix"] = attn_init(k1, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                             cfg.head_dim, qkv_bias=cfg.qkv_bias, dtype=dt)
+    elif kind == "rglru":
+        p["mix"] = rglru_init(k1, cfg.d_model, cfg.d_rnn or cfg.d_model,
+                              dtype=dt)
+    elif kind == "mlstm":
+        p["mix"] = mlstm_init(k1, cfg.d_model, cfg.n_heads, dtype=dt)
+    elif kind == "slstm":
+        p["mix"] = slstm_init(k1, cfg.d_model, cfg.n_heads, dtype=dt)
+    else:
+        raise ValueError(kind)
+    if kind in ("attn", "rglru") and cfg.d_ff:
+        p["norm2"] = norm_init(cfg.d_model, cfg.norm, dtype=dt)
+        if cfg.is_moe:
+            p["mlp"] = moe_init(k2, cfg.d_model, cfg.d_ff, cfg.n_experts,
+                                dtype=dt)
+        else:
+            p["mlp"] = mlp_init(k2, cfg.d_model, cfg.d_ff, dtype=dt)
+    return p
+
+
+def _attn_window(cfg: ModelConfig) -> int:
+    return cfg.sliding_window or cfg.local_window
+
+
+def block_apply_full(p, x, positions, cfg: ModelConfig, kind: str):
+    """Full-sequence block. Returns (x, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = norm_apply(p["norm1"], x, cfg.norm)
+    if kind == "attn":
+        mix = full_attention(p["mix"], h, positions, n_q=cfg.n_heads,
+                             n_kv=cfg.n_kv_heads, hd=cfg.head_dim,
+                             rope_theta=cfg.rope_theta,
+                             window=_attn_window(cfg))
+    elif kind == "rglru":
+        mix = rglru_full(p["mix"], h, act=cfg.act)
+    elif kind == "mlstm":
+        mix = mlstm_full(p["mix"], h, cfg.n_heads)
+    elif kind == "slstm":
+        mix = slstm_full(p["mix"], h, cfg.n_heads)
+    else:
+        raise ValueError(kind)
+    x = x + mix
+    if "mlp" in p:
+        h = norm_apply(p["norm2"], x, cfg.norm)
+        if cfg.is_moe:
+            mesh = sharding.ctx_mesh()
+            if sharding.ctx_flag("moe_ep") and moe_supports_ep(
+                    cfg.n_experts, mesh, h.shape[0], h.shape[1]):
+                m, aux = moe_apply_ep(p["mlp"], h, k=cfg.experts_per_tok,
+                                      act=cfg.act, mesh=mesh)
+            else:
+                m, aux = moe_apply(p["mlp"], h, k=cfg.experts_per_tok,
+                                   act=cfg.act)
+        else:
+            m = mlp_apply(p["mlp"], h, cfg.act)
+        x = x + m
+    return x, aux
+
+
+def block_apply_decode(p, x, state, cur_pos, cfg: ModelConfig, kind: str):
+    """One-token decode. Returns (x, new_state)."""
+    h = norm_apply(p["norm1"], x, cfg.norm)
+    if kind == "attn":
+        mix, new_state = decode_attention(
+            p["mix"], h, state, cur_pos, n_q=cfg.n_heads, n_kv=cfg.n_kv_heads,
+            hd=cfg.head_dim, rope_theta=cfg.rope_theta,
+            window=_attn_window(cfg))
+    elif kind == "rglru":
+        mix, new_state = rglru_step(p["mix"], h, state, act=cfg.act)
+    elif kind == "mlstm":
+        mix, new_state = mlstm_step(p["mix"], h, state, cfg.n_heads)
+    elif kind == "slstm":
+        mix, new_state = slstm_step(p["mix"], h, state, cfg.n_heads)
+    else:
+        raise ValueError(kind)
+    x = x + mix
+    if "mlp" in p:
+        h = norm_apply(p["norm2"], x, cfg.norm)
+        if cfg.is_moe:
+            m, _ = moe_apply(p["mlp"], h, k=cfg.experts_per_tok, act=cfg.act)
+        else:
+            m = mlp_apply(p["mlp"], h, cfg.act)
+        x = x + m
+    return x, new_state
+
+
+def block_state_init(cfg: ModelConfig, kind: str, batch: int, cache_len: int,
+                     kv_bits: int = 0):
+    dt = model_dtype(cfg)
+    if kind == "attn":
+        w = _attn_window(cfg)
+        clen = min(cache_len, w) if w else cache_len
+        return init_cache(batch, cfg.n_kv_heads, cfg.head_dim, clen,
+                          dtype=dt, kv_bits=kv_bits)
+    if kind == "rglru":
+        return rglru_state_init(batch, cfg.d_rnn or cfg.d_model, dtype=dt)
+    if kind == "mlstm":
+        return mlstm_state_init(batch, cfg.d_model, cfg.n_heads)
+    if kind == "slstm":
+        return slstm_state_init(batch, cfg.d_model)
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# model init
+# ---------------------------------------------------------------------------
+
+def init_params(key, cfg: ModelConfig) -> Dict[str, Any]:
+    dt = model_dtype(cfg)
+    k_emb, k_layers, k_head, k_bneck = jax.random.split(key, 4)
+    params: Dict[str, Any] = {}
+
+    if cfg.frontend == "audio" and cfg.n_codebooks > 1:
+        keys = jax.random.split(k_emb, cfg.n_codebooks)
+        params["embed"] = {"table": jnp.stack(
+            [embed_init(k, cfg.vocab_size, cfg.d_model, dtype=dt)["table"]
+             for k in keys])}                      # [K, V, d]
+    else:
+        params["embed"] = embed_init(k_emb, cfg.vocab_size, cfg.d_model,
+                                     dtype=dt)
+
+    if cfg.homogeneous:
+        keys = jax.random.split(k_layers, cfg.n_layers)
+        params["layers"] = jax.vmap(
+            lambda k: block_init(k, cfg, "attn"))(keys)   # stacked [L, ...]
+    else:
+        keys = jax.random.split(k_layers, cfg.n_layers)
+        params["layers"] = tuple(
+            block_init(keys[i], cfg, cfg.block_kind(i))
+            for i in range(cfg.n_layers))
+
+    params["final_norm"] = norm_init(cfg.d_model, cfg.norm, dtype=dt)
+    if cfg.frontend == "audio" and cfg.n_codebooks > 1:
+        keys = jax.random.split(k_head, cfg.n_codebooks)
+        params["lm_head"] = {"w": jnp.stack(
+            [dense_init(k, cfg.d_model, cfg.vocab_size, dtype=dt)["w"]
+             for k in keys])}                      # [K, d, V]
+    elif not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(k_head, cfg.d_model, cfg.vocab_size,
+                                       dtype=dt)
+    return params
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, cache_len: int,
+                      kv_bits: int = 0):
+    """Per-layer decode state (stacked for homogeneous archs).
+    ``kv_bits=8``: int8 KV cache (attention blocks only)."""
+    if cfg.homogeneous:
+        one = block_state_init(cfg, "attn", batch, cache_len, kv_bits)
+        return jax.tree.map(
+            lambda a: jnp.zeros((cfg.n_layers,) + a.shape, a.dtype), one)
+    return tuple(block_state_init(cfg, cfg.block_kind(i), batch, cache_len,
+                                  kv_bits if cfg.block_kind(i) == "attn"
+                                  else 0)
+                 for i in range(cfg.n_layers))
+
+
+# ---------------------------------------------------------------------------
+# embedding / head
+# ---------------------------------------------------------------------------
+
+def embed_tokens(params, tokens, cfg: ModelConfig,
+                 embeddings: Optional[jnp.ndarray] = None):
+    """tokens: [B,S] int32, or [B,K,S] for audio. ``embeddings`` is the
+    stubbed modality-frontend output ([B,Nv,d] vision prefix)."""
+    if cfg.frontend == "audio" and cfg.n_codebooks > 1:
+        # sum codebook embeddings: table [K,V,d], tokens [B,K,S]
+        x = jnp.sum(jnp.take_along_axis(
+            params["embed"]["table"][None],            # [1,K,V,d]
+            tokens[..., None].astype(jnp.int32), axis=2), axis=1)
+    else:
+        x = embed_apply(params["embed"], tokens)
+    if cfg.tie_embeddings:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    if cfg.frontend == "vision" and embeddings is not None:
+        x = jnp.concatenate([embeddings.astype(x.dtype), x], axis=1)
+    return x
+
+
+def norm_apply_final(params, x, cfg: ModelConfig):
+    return norm_apply(params["final_norm"], x, cfg.norm)
+
+
+def lm_logits(params, x, cfg: ModelConfig):
+    if cfg.frontend == "audio" and cfg.n_codebooks > 1:
+        return jnp.einsum("bsd,kdv->bksv", x.astype(jnp.float32),
+                          params["lm_head"]["w"].astype(jnp.float32))
+    if cfg.tie_embeddings:
+        return jnp.einsum("bsd,vd->bsv", x.astype(jnp.float32),
+                          params["embed"]["table"].astype(jnp.float32))
+    return x.astype(jnp.float32) @ params["lm_head"]["w"].astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# layer runners (shared by the full model and the split encoder/decoder)
+# ---------------------------------------------------------------------------
+
+def run_layers(layers, x, positions, cfg: ModelConfig, *, train: bool,
+               kinds: Optional[Tuple[str, ...]] = None):
+    """Full-sequence pass through a group of layers.
+
+    ``layers``: stacked pytree (homogeneous) or tuple of per-layer pytrees.
+    Returns (x, aux_loss_sum).
+    """
+    if cfg.homogeneous:
+        def body(carry, lp):
+            h, aux = carry
+            h = sharding.constrain(h, "resid")
+            h, a = block_apply_full(lp, h, positions, cfg, "attn")
+            return (h, aux + a), None
+        f = jax.checkpoint(body) if train else body
+        (x, aux), _ = jax.lax.scan(f, (x, jnp.zeros((), jnp.float32)), layers)
+        return x, aux
+
+    kinds = kinds or tuple(cfg.block_kind(i) for i in range(len(layers)))
+    aux = jnp.zeros((), jnp.float32)
+    for lp, kind in zip(layers, kinds):
+        x = sharding.constrain(x, "resid")
+        fn = functools.partial(block_apply_full, cfg=cfg, kind=kind)
+        if train:
+            fn = jax.checkpoint(fn)
+        x, a = fn(lp, x, positions)
+        aux = aux + a
+    return x, aux
+
+
+def run_layers_decode(layers, x, states, cur_pos, cfg: ModelConfig,
+                      kinds: Optional[Tuple[str, ...]] = None):
+    """One-token decode through a group of layers. Returns (x, new_states)."""
+    if cfg.homogeneous:
+        def body(h, inp):
+            lp, st = inp
+            h, new_st = block_apply_decode(lp, h, st, cur_pos, cfg, "attn")
+            return h, new_st
+        x, new_states = jax.lax.scan(body, x, (layers, states))
+        return x, new_states
+
+    kinds = kinds or tuple(cfg.block_kind(i) for i in range(len(layers)))
+    new_states = []
+    for lp, st, kind in zip(layers, states, kinds):
+        x, ns = block_apply_decode(lp, x, st, cur_pos, cfg, kind)
+        new_states.append(ns)
+    return x, tuple(new_states)
+
+
+# ---------------------------------------------------------------------------
+# top-level forwards
+# ---------------------------------------------------------------------------
+
+def forward(params, tokens, cfg: ModelConfig, *, train: bool = False,
+            embeddings: Optional[jnp.ndarray] = None):
+    """Full-sequence forward. Returns (logits, aux_loss)."""
+    x = embed_tokens(params, tokens, cfg, embeddings)
+    B, S = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    x, aux = run_layers(params["layers"], x, positions, cfg, train=train)
+    x = norm_apply(params["final_norm"], x, cfg.norm)
+    logits = sharding.constrain(lm_logits(params, x, cfg), "logits")
+    return logits, aux
+
+
+def decode_step(params, token, states, cur_pos, cfg: ModelConfig,
+                embeddings: Optional[jnp.ndarray] = None):
+    """One new token against the decode state. token: [B,1] (or [B,K,1]
+    audio). Returns (logits for the new position, new states)."""
+    x = embed_tokens(params, token, cfg, None)
+    x, new_states = run_layers_decode(params["layers"], x, states, cur_pos,
+                                      cfg)
+    x = norm_apply(params["final_norm"], x, cfg.norm)
+    return lm_logits(params, x, cfg), new_states
+
+
+def lm_loss(logits, labels, mask=None):
+    """Cross-entropy over the vocab axis; labels int [B,S] or [B,K,S]."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

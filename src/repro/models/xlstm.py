@@ -1,0 +1,184 @@
+"""xLSTM blocks: mLSTM (matrix memory, parallelizable) and sLSTM (scalar
+memory with recurrent gate connections) [arXiv:2405.04517].
+
+Both are linear-time recurrences implemented with ``jax.lax.scan`` over time
+(exact recurrent form with the max-stabilizer m); decode is a single step with
+carried state. d_ff=0 in the assigned config: the blocks carry their own
+up/down projections (pre-up-projection mLSTM ×2, post-up-projection sLSTM 4/3)
+per the paper's block design.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_apply, dense_init, _normal
+from repro.models.scan_utils import chunked_scan
+
+_MLSTM_PF = 2.0    # mLSTM up-projection factor
+_SLSTM_PF = 4.0 / 3.0
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_init(key, d: int, n_heads: int, *, dtype=jnp.bfloat16):
+    di = int(_MLSTM_PF * d)
+    ks = jax.random.split(key, 8)
+    return {
+        "up_l": dense_init(ks[0], d, di, dtype=dtype),    # mlstm path
+        "up_r": dense_init(ks[1], d, di, dtype=dtype),    # output gate path
+        "wq": dense_init(ks[2], di, di, dtype=dtype),
+        "wk": dense_init(ks[3], di, di, dtype=dtype),
+        "wv": dense_init(ks[4], di, di, dtype=dtype),
+        "wi": dense_init(ks[5], di, n_heads, bias=True, dtype=dtype),
+        "wf": dense_init(ks[6], di, n_heads, bias=True, dtype=dtype),
+        "down": dense_init(ks[7], di, d, dtype=dtype),
+    }
+
+
+def _mlstm_qkvif(p, x, n_heads):
+    """x: [B,S,d] -> q,k,v [B,S,H,hd] fp32; i,f preacts [B,S,H] fp32."""
+    xl = dense_apply(p["up_l"], x)
+    B, S, di = xl.shape
+    hd = di // n_heads
+    q = (xl @ p["wq"]["w"]).reshape(B, S, n_heads, hd).astype(jnp.float32)
+    k = (xl @ p["wk"]["w"]).reshape(B, S, n_heads, hd).astype(jnp.float32)
+    k = k / jnp.sqrt(float(hd))
+    v = (xl @ p["wv"]["w"]).reshape(B, S, n_heads, hd).astype(jnp.float32)
+    i_pre = dense_apply(p["wi"], xl).astype(jnp.float32)
+    f_pre = dense_apply(p["wf"], xl).astype(jnp.float32)
+    return xl, q, k, v, i_pre, f_pre
+
+
+def mlstm_state_init(batch: int, d: int, n_heads: int):
+    di = int(_MLSTM_PF * d)
+    hd = di // n_heads
+    return {
+        "C": jnp.zeros((batch, n_heads, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, n_heads, hd), jnp.float32),
+        "m": jnp.full((batch, n_heads), -jnp.inf, jnp.float32),
+    }
+
+
+def _mlstm_cell(state, qkvif):
+    q, k, v, i_pre, f_pre = qkvif          # per-timestep: [B,H,hd]x3, [B,H]x2
+    C, n, m = state["C"], state["n"], state["m"]
+    log_f = -jax.nn.softplus(-f_pre)       # log sigmoid(f̃)
+    m_new = jnp.maximum(log_f + m, i_pre)
+    m_new = jnp.where(jnp.isfinite(m_new), m_new, i_pre)
+    i_g = jnp.exp(i_pre - m_new)
+    f_g = jnp.exp(log_f + m - m_new)
+    f_g = jnp.where(jnp.isfinite(m), f_g, 0.0)
+    C = f_g[..., None, None] * C + i_g[..., None, None] * (v[..., :, None] * k[..., None, :])
+    n = f_g[..., None] * n + i_g[..., None] * k
+    h_num = jnp.einsum("bhij,bhj->bhi", C, q)
+    h_den = jnp.maximum(jnp.abs(jnp.einsum("bhj,bhj->bh", n, q)), 1.0)
+    h = h_num / h_den[..., None]
+    return {"C": C, "n": n, "m": m_new}, h
+
+
+def mlstm_full(p, x, n_heads: int):
+    """Full-sequence mLSTM block. x: [B,S,d] -> [B,S,d]."""
+    xl, q, k, v, i_pre, f_pre = _mlstm_qkvif(p, x, n_heads)
+    B, S = x.shape[:2]
+    state = mlstm_state_init(B, x.shape[-1], n_heads)
+
+    def step(st, t):
+        qt, kt, vt, it, ft = t
+        return _mlstm_cell(st, (qt, kt, vt, it, ft))
+
+    xs = (q.swapaxes(0, 1), k.swapaxes(0, 1), v.swapaxes(0, 1),
+          i_pre.swapaxes(0, 1), f_pre.swapaxes(0, 1))
+    # small chunks: the [B,H,hd,hd] matrix memory is the dominant residual,
+    # saved once per chunk (outer) and once per step within the chunk being
+    # differentiated — 64 balances the two (see DESIGN.md)
+    _, hs = chunked_scan(step, state, xs, chunk=64)   # hs: [S,B,H,hd]
+    h = hs.swapaxes(0, 1).reshape(B, S, -1).astype(x.dtype)
+    gate = jax.nn.silu(dense_apply(p["up_r"], x))
+    return dense_apply(p["down"], h * gate)
+
+
+def mlstm_step(p, x, state, n_heads: int):
+    """One decode step. x: [B,1,d]."""
+    xl, q, k, v, i_pre, f_pre = _mlstm_qkvif(p, x, n_heads)
+    new_state, h = _mlstm_cell(
+        state, (q[:, 0], k[:, 0], v[:, 0], i_pre[:, 0], f_pre[:, 0]))
+    B = x.shape[0]
+    h = h.reshape(B, 1, -1).astype(x.dtype)
+    gate = jax.nn.silu(dense_apply(p["up_r"], x))
+    return dense_apply(p["down"], h * gate), new_state
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_init(key, d: int, n_heads: int, *, dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 11)
+    hd = d // n_heads
+    di = int(_SLSTM_PF * d)
+    p = {"down": dense_init(ks[8], di, d, dtype=dtype),
+         "up": dense_init(ks[9], d, di, dtype=dtype),
+         "up_gate": dense_init(ks[10], d, di, dtype=dtype)}
+    for j, g in enumerate(("i", "f", "z", "o")):
+        p[f"w_{g}"] = dense_init(ks[j], d, d, bias=True, dtype=dtype)
+        # recurrent block-diagonal connection, stored per head [H, hd, hd]
+        p[f"r_{g}"] = _normal(ks[4 + j if j < 4 else j], (n_heads, hd, hd),
+                              hd ** -0.5, dtype)
+    return p
+
+
+def slstm_state_init(batch: int, d: int):
+    z = jnp.zeros((batch, d), jnp.float32)
+    return {"c": z, "n": z, "m": jnp.full((batch, d), -jnp.inf, jnp.float32),
+            "h": z}
+
+
+def _slstm_cell(p, state, x_t, n_heads):
+    """x_t: [B,d] preact inputs; recurrent connections use h_{t-1}."""
+    B, d = x_t.shape
+    hd = d // n_heads
+    h_prev = state["h"].reshape(B, n_heads, hd)
+
+    def pre(g):
+        wx = dense_apply(p[f"w_{g}"], x_t).astype(jnp.float32)
+        rh = jnp.einsum("bhi,hij->bhj", h_prev,
+                        p[f"r_{g}"].astype(jnp.float32)).reshape(B, d)
+        return wx + rh
+
+    i_pre, f_pre, z_pre, o_pre = pre("i"), pre("f"), pre("z"), pre("o")
+    log_f = -jax.nn.softplus(-f_pre)
+    m_new = jnp.maximum(log_f + state["m"], i_pre)
+    m_new = jnp.where(jnp.isfinite(m_new), m_new, i_pre)
+    i_g = jnp.exp(i_pre - m_new)
+    f_g = jnp.exp(log_f + state["m"] - m_new)
+    f_g = jnp.where(jnp.isfinite(state["m"]), f_g, 0.0)
+    c = f_g * state["c"] + i_g * jnp.tanh(z_pre)
+    n = f_g * state["n"] + i_g
+    h = jax.nn.sigmoid(o_pre) * c / jnp.maximum(n, 1e-6)
+    return {"c": c, "n": n, "m": m_new, "h": h}, h
+
+
+def slstm_full(p, x, n_heads: int):
+    """Full-sequence sLSTM block. x: [B,S,d] -> [B,S,d]."""
+    B, S, d = x.shape
+    state = slstm_state_init(B, d)
+
+    def step(st, x_t):
+        return _slstm_cell(p, st, x_t, n_heads)
+
+    _, hs = chunked_scan(step, state,
+                         x.swapaxes(0, 1).astype(jnp.float32))
+    h = hs.swapaxes(0, 1).astype(x.dtype)          # [B,S,d]
+    u = jax.nn.gelu(dense_apply(p["up"], h)) * dense_apply(p["up_gate"], h)
+    return dense_apply(p["down"], u)
+
+
+def slstm_step(p, x, state, n_heads: int):
+    """One decode step. x: [B,1,d]."""
+    new_state, h = _slstm_cell(p, state, x[:, 0].astype(jnp.float32), n_heads)
+    h = h[:, None, :].astype(x.dtype)
+    u = jax.nn.gelu(dense_apply(p["up"], h)) * dense_apply(p["up_gate"], h)
+    return dense_apply(p["down"], u), new_state

@@ -1,0 +1,120 @@
+"""Batched serving engine with split-mode support.
+
+``prefill`` feeds the prompt through ``decode_step`` under ``lax.scan`` —
+exact for every architecture family (attention caches and recurrent states
+update identically to decode), which keeps one code path for all 10 archs.
+``generate`` then decodes with the orchestrator-selected bottleneck mode,
+accounting the bytes that cross the UE->edge boundary per token.
+
+The dry-run lowers ``serve_step`` (one token against a seq_len-deep state)
+via ``launch.dryrun``; this module is the runnable CPU-scale engine.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import split as SP
+from repro.core.orchestrator import Orchestrator
+from repro.models import transformer as T
+
+
+def make_serve_step(cfg: ModelConfig, *, mode: Optional[int] = None):
+    """serve_step(params, token, states, cur_pos) -> (logits, new_states).
+
+    mode None: monolithic model; mode int: split model (bottleneck mode m
+    crossing the simulated link)."""
+    if mode is None:
+        @jax.jit
+        def step(params, token, states, cur_pos):
+            return T.decode_step(params, token, states, cur_pos, cfg)
+        return step
+
+    @jax.jit
+    def step(params, token, states, cur_pos):
+        logits, new_states, _ = SP.split_decode_step(
+            params, token, states, cur_pos, cfg, mode=mode)
+        return logits, new_states
+    return step
+
+
+@dataclass
+class GenStats:
+    tokens: int = 0
+    wire_bytes: int = 0
+    mode_counts: Dict[int, int] = field(default_factory=dict)
+
+
+class ServingEngine:
+    def __init__(self, params, cfg: ModelConfig, *, cache_len: int = 512,
+                 batch: int = 1,
+                 orchestrator: Optional[Orchestrator] = None):
+        self.params = params
+        self.cfg = cfg
+        self.cache_len = cache_len
+        self.batch = batch
+        self.orch = orchestrator
+        self.states = T.init_decode_state(cfg, batch, cache_len)
+        self.pos = 0
+        self._steps: Dict[Optional[int], Callable] = {}
+        self.stats = GenStats()
+
+    def _step(self, mode: Optional[int]):
+        if mode not in self._steps:
+            self._steps[mode] = make_serve_step(self.cfg, mode=mode)
+        return self._steps[mode]
+
+    def reset(self):
+        self.states = T.init_decode_state(self.cfg, self.batch,
+                                          self.cache_len)
+        self.pos = 0
+        self.stats = GenStats()
+
+    def prefill(self, tokens: jnp.ndarray) -> jnp.ndarray:
+        """tokens: [B, S] (or [B, K, S] audio). Returns last-position logits."""
+        step = self._step(None)
+        S = tokens.shape[-1]
+        logits = None
+        for t in range(S):      # tiny prompts in CPU examples
+            tok = tokens[..., t:t + 1]
+            logits, self.states = step(self.params, tok, self.states,
+                                       jnp.int32(self.pos))
+            self.pos += 1
+        return logits
+
+    def decode_tokens(self, first_token: jnp.ndarray, n_steps: int, *,
+                      greedy: bool = True, capacity_bps_fn=None) -> np.ndarray:
+        """Generate ``n_steps`` tokens; per-token the orchestrator picks the
+        transmit mode from the live channel capacity."""
+        tok = first_token
+        out: List[np.ndarray] = []
+        for _ in range(n_steps):
+            mode: Optional[int] = None
+            if self.orch is not None:
+                if capacity_bps_fn is not None:
+                    self.orch.observe_capacity(capacity_bps_fn())
+                mode = self.orch.choose_mode()
+            logits, states, pb = (
+                SP.split_decode_step(self.params, tok, self.states,
+                                     jnp.int32(self.pos), self.cfg,
+                                     mode=mode)
+                if mode is not None else
+                (*self._step(None)(self.params, tok, self.states,
+                                   jnp.int32(self.pos)), 0))
+            self.states = states
+            self.pos += 1
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            tok = nxt if not greedy else nxt
+            out.append(np.asarray(nxt))
+            self.stats.tokens += int(nxt.size)
+            self.stats.wire_bytes += int(pb)
+            key = mode if mode is not None else -1
+            self.stats.mode_counts[key] = \
+                self.stats.mode_counts.get(key, 0) + 1
+        return np.concatenate(out, axis=-1)

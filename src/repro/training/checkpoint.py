@@ -1,0 +1,75 @@
+"""Dependency-free pytree checkpointing (npz + path-keyed flattening).
+
+Handles the mixed dict/tuple pytrees our params use; dtypes (incl. bf16 via
+a uint16 view) round-trip exactly.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        arr = np.asarray(leaf)
+        flat[key] = arr
+    return flat
+
+
+def save(path: str, tree, metadata: Dict[str, Any] | None = None) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten(tree)
+    store = {}
+    dtypes = {}
+    for k, v in flat.items():
+        if v.dtype == jnp.bfloat16:
+            store[k] = v.view(np.uint16)
+            dtypes[k] = "bfloat16"
+        else:
+            store[k] = v
+            dtypes[k] = str(v.dtype)
+    store["__meta__"] = np.frombuffer(
+        json.dumps({"dtypes": dtypes, "meta": metadata or {}}).encode(),
+        dtype=np.uint8)
+    np.savez(path, **store)
+
+
+def restore(path: str, like) -> Any:
+    """Restore into the structure of ``like`` (a template pytree)."""
+    with np.load(path if path.endswith(".npz") else path + ".npz") as z:
+        meta = json.loads(bytes(z["__meta__"]).decode())
+        flat = {}
+        for k in z.files:
+            if k == "__meta__":
+                continue
+            arr = z[k]
+            if meta["dtypes"].get(k) == "bfloat16":
+                arr = arr.view(jnp.bfloat16)
+            flat[k] = arr
+
+    leaves_with_path, treedef = jax.tree_util.tree_flatten_with_path(like)
+    new_leaves = []
+    for path_k, leaf in leaves_with_path:
+        key = "/".join(
+            str(getattr(k, "key", getattr(k, "idx", k))) for k in path_k)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        arr = flat[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"shape mismatch for {key!r}: "
+                             f"{arr.shape} vs {leaf.shape}")
+        new_leaves.append(jnp.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, new_leaves)
+
+
+def load_metadata(path: str) -> Dict[str, Any]:
+    with np.load(path if path.endswith(".npz") else path + ".npz") as z:
+        return json.loads(bytes(z["__meta__"]).decode())["meta"]

@@ -1,0 +1,118 @@
+"""Transformer training loop: loss builders, (optionally sharded) train
+steps, and the driver used by examples and the multi-pod launcher.
+
+The same ``make_train_step`` serves three callers:
+  - CPU smoke tests / examples (mesh=None),
+  - the multi-pod dry-run (mesh + ShapeDtypeStruct lowering),
+  - real training (mesh + device arrays).
+"""
+from __future__ import annotations
+
+import functools
+import time
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.core import pipeline as PL
+from repro.core import split as SP
+from repro.models import sharding
+from repro.models import transformer as T
+from repro.training import optimizer as opt
+
+AUX_WEIGHT = 0.01     # MoE load-balance loss weight
+
+
+def make_loss_fn(cfg: ModelConfig, *, mode: Optional[int] = None,
+                 use_pipeline: bool = False, mesh=None,
+                 n_micro: int = 4, bwd_bits: int = 0) -> Callable:
+    """loss_fn(params, batch) -> (loss, metrics).
+
+    mode None: plain full-model forward (paper-agnostic baseline).
+    mode int: split forward through bottleneck mode m (0 = raw boundary).
+    use_pipeline: route through the 2-stage pod pipeline (requires mesh).
+    """
+    def loss_fn(params, batch):
+        emb = batch.get("embeddings")
+        if use_pipeline:
+            logits, aux = PL.pipeline_forward(
+                params, batch["tokens"], cfg, mesh=mesh, n_micro=n_micro,
+                mode=mode or 0, train=True, bwd_bits=bwd_bits,
+                embeddings=emb)
+        elif mode is None:
+            logits, aux = T.forward(params, batch["tokens"], cfg, train=True,
+                                    embeddings=emb)
+        else:
+            logits, aux, _ = SP.split_forward(params, batch["tokens"], cfg,
+                                              mode, train=True,
+                                              embeddings=emb)
+        labels = batch["labels"]
+        if cfg.frontend == "vision" and emb is not None:
+            logits = logits[:, -labels.shape[-1]:]     # text positions only
+        loss = T.lm_loss(logits, labels)
+        total = loss + AUX_WEIGHT * aux
+        return total, {"lm_loss": loss, "aux_loss": aux}
+    return loss_fn
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig, *,
+                    mode: Optional[int] = None, mesh=None,
+                    use_pipeline: bool = False, n_micro: int = 4,
+                    seq_shard: bool = True, act_policy: Optional[str] = None,
+                    moe_ep: bool = False, bwd_bits: int = 0,
+                    donate: bool = True) -> Callable:
+    """Returns jitted step(params, opt_state, batch) -> (params, opt_state,
+    metrics). When ``mesh`` is given, activation constraints are installed
+    and callers pass shardings via in_shardings at lower time."""
+    loss_fn = make_loss_fn(cfg, mode=mode, use_pipeline=use_pipeline,
+                           mesh=mesh, n_micro=n_micro, bwd_bits=bwd_bits)
+    rules = (sharding.default_activation_rules(mesh, seq_shard=seq_shard,
+                                               act_policy=act_policy,
+                                               moe_ep=moe_ep)
+             if mesh is not None else {})
+
+    def step(params, opt_state, batch):
+        with sharding.activation_rules(mesh, rules):
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+            params, opt_state, info = opt.apply_updates(
+                params, grads, opt_state, tcfg)
+        return params, opt_state, dict(metrics, loss=loss, **info)
+
+    return step
+
+
+def make_eval_step(cfg: ModelConfig, *, mode: Optional[int] = None):
+    loss_fn = make_loss_fn(cfg, mode=mode)
+
+    @jax.jit
+    def step(params, batch):
+        loss, metrics = loss_fn(params, batch)
+        return dict(metrics, loss=loss)
+    return step
+
+
+def train_loop(params, cfg: ModelConfig, tcfg: TrainConfig,
+               data_fn: Callable[[int], Dict], *, steps: int,
+               mode: Optional[int] = None, log_every: int = 20,
+               callback: Optional[Callable] = None) -> Tuple[Any, list]:
+    """Simple single-host driver used by the examples."""
+    step_fn = jax.jit(make_train_step(cfg, tcfg, mode=mode))
+    opt_state = opt.init(params)
+    history = []
+    t0 = time.time()
+    for s in range(steps):
+        batch = {k: jnp.asarray(v) for k, v in data_fn(s).items()}
+        params, opt_state, m = step_fn(params, opt_state, batch)
+        if s % log_every == 0 or s == steps - 1:
+            rec = {k: float(v) for k, v in m.items()}
+            rec.update(step=s, wall=time.time() - t0)
+            history.append(rec)
+            print(f"[train] step {s:5d} loss {rec['loss']:.4f} "
+                  f"lm {rec['lm_loss']:.4f} lr {rec['lr']:.2e} "
+                  f"({rec['wall']:.1f}s)")
+            if callback:
+                callback(params, rec)
+    return params, history

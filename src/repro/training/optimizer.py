@@ -1,0 +1,80 @@
+"""AdamW with freeze-mask support (pure JAX, optax-free).
+
+The freeze mask is how Algorithm 1's "Freeze(Encoder1, Decoder1)" is
+implemented: masked leaves keep their value and their optimizer state is
+never touched, so cascade phases can share one optimizer.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+
+
+class AdamState(NamedTuple):
+    step: jnp.ndarray
+    m: Any
+    v: Any
+
+
+def init(params) -> AdamState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return AdamState(step=jnp.zeros((), jnp.int32), m=zeros,
+                     v=jax.tree.map(jnp.copy, zeros))
+
+
+def lr_schedule(cfg: TrainConfig, step):
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                    0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.learning_rate * warm * (0.1 + 0.9 * cos)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), gn
+
+
+def apply_updates(params, grads, state: AdamState, cfg: TrainConfig,
+                  mask=None):
+    """One AdamW step. ``mask``: pytree of bools, True = trainable."""
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    step = state.step + 1
+    lr = lr_schedule(cfg, step)
+    b1, b2 = cfg.beta1, cfg.beta2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v, trainable=True):
+        gf = g.astype(jnp.float32)
+        m_new = b1 * m + (1 - b1) * gf
+        v_new = b2 * v + (1 - b2) * gf * gf
+        delta = lr * (m_new / bc1) / (jnp.sqrt(v_new / bc2) + cfg.eps)
+        delta = delta + lr * cfg.weight_decay * p.astype(jnp.float32)
+        p_new = (p.astype(jnp.float32) - delta).astype(p.dtype)
+        if trainable is True:
+            return p_new, m_new, v_new
+        t = jnp.asarray(trainable)
+        return (jnp.where(t, p_new, p), jnp.where(t, m_new, m),
+                jnp.where(t, v_new, v))
+
+    p_leaves, treedef = jax.tree.flatten(params)
+    g_leaves = treedef.flatten_up_to(grads)
+    m_leaves = treedef.flatten_up_to(state.m)
+    v_leaves = treedef.flatten_up_to(state.v)
+    t_leaves = (treedef.flatten_up_to(mask) if mask is not None
+                else [True] * len(p_leaves))
+    triples = [upd(p, g, m, v, t) for p, g, m, v, t in
+               zip(p_leaves, g_leaves, m_leaves, v_leaves, t_leaves)]
+    p_new = jax.tree.unflatten(treedef, [t[0] for t in triples])
+    m_new = jax.tree.unflatten(treedef, [t[1] for t in triples])
+    v_new = jax.tree.unflatten(treedef, [t[2] for t in triples])
+    return p_new, AdamState(step, m_new, v_new), {"lr": lr, "grad_norm": gnorm}

@@ -1,0 +1,12 @@
+import os
+import sys
+
+# tests run on the single real CPU device (the dry-run sets its own flags in
+# a subprocess); keep compilation light
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+
+jax.config.update("jax_default_matmul_precision", "highest")

@@ -1,0 +1,72 @@
+"""Activation-sharding policies and tp_scope param-rule variants (the §Perf
+hillclimb knobs) — spec-level invariants that need no devices."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_reduced
+from repro.core import split as SP
+from repro.models import sharding
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return jax.sharding.AbstractMesh((2, 2), ("data", "model"))
+
+
+def test_batch_pspec_policies(mesh):
+    assert sharding.batch_pspec(mesh, 2, 8) == P(("data",), None)
+    assert sharding.batch_pspec(mesh, 2, 8, "batch2d") == \
+        P(("data", "model"), None)
+    # batch 2 divides data(2) but not chips(4): batch2d degrades gracefully
+    assert sharding.batch_pspec(mesh, 2, 2, "batch2d") == P(("data",), None)
+    # batch 1 (long_500k): fully replicated
+    assert sharding.batch_pspec(mesh, 2, 1) == P(None, None)
+
+
+def test_activation_rules_policies(mesh):
+    seq = sharding.default_activation_rules(mesh, act_policy="seq")
+    assert seq["resid"] == P(("data",), "model", None)
+    batch = sharding.default_activation_rules(mesh, act_policy="batch")
+    assert batch["resid"] == P(("data",), None, None)
+    b2 = sharding.default_activation_rules(mesh, act_policy="batch2d")
+    assert b2["resid"] == P(("data", "model"), None, None)
+    with pytest.raises(ValueError):
+        sharding.default_activation_rules(mesh, act_policy="nope")
+    ep = sharding.default_activation_rules(mesh, act_policy="batch2d",
+                                           moe_ep=True)
+    assert ep["moe_ep"] is True
+
+
+def _leaf_specs(specs):
+    return {sharding._path_str(p): s for p, s in
+            jax.tree_util.tree_flatten_with_path(specs)[0]}
+
+
+def test_tp_scope_ffn_strips_model_from_attention(mesh):
+    cfg = get_reduced("stablelm-3b")
+    shapes = jax.eval_shape(
+        lambda k: SP.init_split_params(k, cfg), jax.random.PRNGKey(0))
+    full = _leaf_specs(sharding.param_pspecs(
+        shapes, mesh, stacked_layers=cfg.homogeneous))
+    ffn = _leaf_specs(sharding.param_pspecs(
+        shapes, mesh, stacked_layers=cfg.homogeneous, tp_scope="ffn"))
+    saw_attn = saw_mlp = False
+    for name, spec in ffn.items():
+        if "mix/" in name:
+            assert "model" not in jax.tree.leaves(tuple(spec)), name
+            saw_attn = True
+        if "mlp/" in name:
+            assert spec == full[name]
+            saw_mlp = True
+    assert saw_attn and saw_mlp
+
+
+def test_ctx_flag_roundtrip(mesh):
+    assert sharding.ctx_mesh() is None
+    assert not sharding.ctx_flag("moe_ep")
+    with sharding.activation_rules(mesh, {"moe_ep": True}):
+        assert sharding.ctx_mesh() is mesh
+        assert sharding.ctx_flag("moe_ep")
+    assert sharding.ctx_mesh() is None

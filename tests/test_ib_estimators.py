@@ -1,0 +1,114 @@
+"""Information-theory estimator correctness (the paper's analysis layer)."""
+import numpy as np
+import pytest
+
+from repro.core.ib import binning, gcmi, info_plane, kde
+
+RNG = np.random.default_rng(0)
+
+
+def test_gcmi_known_gaussian():
+    """For bivariate Gaussians with correlation r, I = -0.5 log2(1-r^2)."""
+    n = 20_000
+    for r in (0.3, 0.6, 0.9):
+        x = RNG.normal(size=(n, 1))
+        y = r * x + np.sqrt(1 - r * r) * RNG.normal(size=(n, 1))
+        est = gcmi.gcmi_cc(x, y)
+        true = -0.5 * np.log2(1 - r * r)
+        assert abs(est - true) < 0.08, (r, est, true)
+
+
+def test_gcmi_independent_near_zero():
+    x = RNG.normal(size=(5000, 3))
+    y = RNG.normal(size=(5000, 3))
+    assert gcmi.gcmi_cc(x, y) < 0.05
+
+
+def test_gcmi_invariance_under_monotone_transform():
+    """MI is invariant to strictly monotone per-dim transforms (paper Eq. 1);
+    the copula rank transform realizes this exactly."""
+    n = 8000
+    x = RNG.normal(size=(n, 2))
+    y = x @ RNG.normal(size=(2, 2)) + 0.5 * RNG.normal(size=(n, 2))
+    base = gcmi.gcmi_cc(x, y)
+    warped = gcmi.gcmi_cc(np.exp(x), np.tanh(y) if False else y ** 3)
+    assert abs(base - warped) < 0.05
+
+
+def test_conditional_mi_ladder_decreases():
+    """Conditioning on variables that carry the same information drives the
+    conditional MI down — the paper's temporal-redundancy diagnostic."""
+    n = 6000
+    x = RNG.normal(size=(n, 4))
+    h_prev = x @ RNG.normal(size=(4, 3)) + 0.2 * RNG.normal(size=(n, 3))
+    h_last = h_prev @ RNG.normal(size=(3, 3)) + 0.2 * RNG.normal(size=(n, 3))
+    unconditioned = gcmi.gcmi_cc(x, h_last)
+    conditioned = gcmi.gccmi_ccc(x, h_last, h_prev)
+    assert conditioned < 0.5 * unconditioned
+
+
+def test_dpi_ordering():
+    """Data-processing inequality: X -> Z -> Z' implies I(X;Z') <= I(X;Z).
+    This is the paper's core argument for why the added bottleneck layer can
+    only lose information."""
+    n = 8000
+    x = RNG.normal(size=(n, 4))
+    z = np.tanh(x @ RNG.normal(size=(4, 4))) + 0.1 * RNG.normal(size=(n, 4))
+    zp = np.tanh(z @ RNG.normal(size=(4, 2))) + 0.1 * RNG.normal(size=(n, 2))
+    assert gcmi.gcmi_cc(x, zp) <= gcmi.gcmi_cc(x, z) + 0.05
+
+
+def test_kde_mi_bounds():
+    n = 3000
+    t = RNG.normal(size=(n, 3))
+    y = (t[:, 0] > 0).astype(int)
+    i_ty = kde.mi_ty(t, y, 2)
+    assert 0.5 < i_ty <= 1.0 + 0.05          # binary label: at most 1 bit
+    i_tx = kde.mi_tx(t, noise_var=0.1)
+    assert i_tx > 0
+
+
+def test_kde_noise_var_monotone():
+    """More noise -> less information about T (compression knob)."""
+    t = RNG.normal(size=(2000, 2))
+    vals = [kde.mi_tx(t, noise_var=v) for v in (0.01, 0.1, 1.0)]
+    assert vals[0] > vals[1] > vals[2]
+
+
+def test_binning_estimates():
+    n = 4000
+    t = RNG.normal(size=(n, 2))
+    y = (t[:, 0] + 0.1 * RNG.normal(size=n) > 0).astype(int)
+    i_ty = binning.bin_mi_ty(t, y, 2, n_bins=20)
+    assert 0.6 < i_ty <= 1.0
+    assert binning.bin_mi_tx(t, n_bins=20) > 5.0   # near log2(n) for distinct
+
+
+def test_info_plane_pipeline():
+    n = 1500
+    x = RNG.normal(size=(n, 6))
+    h = np.tanh(x @ RNG.normal(size=(6, 8)))
+    y = (x[:, 0] > 0).astype(int)
+    pt = info_plane.layer_point(h, x, y, 2)
+    assert pt["I_XH"] > 1.0
+    assert 0 < pt["I_HY"] <= 1.05
+
+
+def test_temporal_redundancy_ladder():
+    """Conditioning on previous temporal states must remove most of the
+    information H_T carries about X (the redundancy the paper quantifies);
+    the ladder is weakly decreasing up to estimator noise."""
+    n, T, D, C_ = 6000, 5, 2, 3
+    x = RNG.normal(size=(n, T, D))
+    # redundant temporal states (the paper's saturated-LSTM regime): every
+    # h_t carries the same underlying signal s(X) plus per-step noise, so
+    # conditioning on previous states removes most of h_T's information and
+    # conditioning on MORE states keeps removing (noise averaging)
+    s = np.tanh(x.reshape(n, -1) @ RNG.normal(size=(T * D, C_)))
+    h = s[:, None, :] + 0.3 * RNG.normal(size=(n, T, C_))
+    unconditioned = gcmi.gcmi_cc(
+        info_plane._reduce(x), info_plane._reduce(h[:, -1]))
+    ladder = info_plane.temporal_redundancy(h, x, max_condition=3)
+    assert all(v >= 0 for v in ladder)
+    assert ladder[0] < 0.7 * unconditioned     # h_{T-1} explains most of h_T
+    assert ladder[-1] <= ladder[0] + 0.05      # weakly decreasing ladder

@@ -1,0 +1,171 @@
+"""Hypothesis property-based tests on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quant
+from repro.core.channel import Channel, ChannelConfig, tx_seconds
+from repro.core.orchestrator import (AppRequirement, ModeProfile,
+                                     Orchestrator)
+from repro.launch import roofline
+
+SETTINGS = dict(max_examples=30, deadline=None)
+
+
+# ---------------------------------------------------------------------------
+# quantization
+# ---------------------------------------------------------------------------
+
+@given(st.integers(1, 6), st.integers(2, 64),
+       st.sampled_from([4, 8]), st.floats(0.01, 100.0))
+@settings(**SETTINGS)
+def test_quant_roundtrip_error_bound(rows, d, bits, scale_mag):
+    """|x - dq(q(x))| <= scale/2 elementwise (symmetric rounding bound)."""
+    rng = np.random.default_rng(rows * d)
+    x = jnp.asarray(scale_mag * rng.normal(size=(rows, d)), jnp.float32)
+    q, s = quant.quantize(x, bits)
+    err = jnp.abs(x - quant.dequantize(q, s, bits))
+    assert bool(jnp.all(err <= s / 2 + 1e-6 * scale_mag))
+
+
+@given(st.integers(1, 4), st.integers(2, 32))
+@settings(**SETTINGS)
+def test_quant_codes_in_range(rows, d):
+    rng = np.random.default_rng(rows + d)
+    x = jnp.asarray(rng.normal(size=(rows, d)), jnp.float32)
+    for bits in (4, 8):
+        q, _ = quant.quantize(x, bits)
+        lim = quant.qmax(bits)
+        assert int(jnp.max(jnp.abs(q.astype(jnp.int32)))) <= lim
+
+
+@given(st.integers(2, 32), st.integers(1, 8))
+@settings(**SETTINGS)
+def test_ste_gradient_is_identity(d, rows):
+    rng = np.random.default_rng(d)
+    x = jnp.asarray(rng.normal(size=(rows, d)), jnp.float32)
+    g = jax.grad(lambda x: jnp.sum(quant.ste_quantize(x, 8) * 2.0))(x)
+    np.testing.assert_allclose(np.asarray(g), 2.0)
+
+
+@given(st.integers(1, 64), st.integers(8, 512))
+@settings(**SETTINGS)
+def test_payload_bytes_monotone(rows, d):
+    """Fewer bits -> strictly fewer wire bytes; raw bf16 is the ceiling."""
+    b4 = quant.payload_bytes((rows, d), 4)
+    b8 = quant.payload_bytes((rows, d), 8)
+    raw = quant.payload_bytes((rows, d), 0)
+    assert b4 < b8 <= raw + rows * 2
+
+
+# ---------------------------------------------------------------------------
+# orchestrator
+# ---------------------------------------------------------------------------
+
+@given(st.lists(st.floats(1e4, 1e9), min_size=3, max_size=20),
+       st.floats(0.001, 0.5))
+@settings(**SETTINGS)
+def test_orchestrator_choice_always_valid(capacities, budget):
+    profiles = [ModeProfile(0, 100_000, 1.0), ModeProfile(1, 10_000, 1.2),
+                ModeProfile(2, 1_000, 1.5)]
+    orch = Orchestrator(profiles, AppRequirement(latency_budget_s=budget))
+    for c in capacities:
+        orch.observe_capacity(c)
+        mode = orch.choose_mode()
+        assert mode in (0, 1, 2)
+        p = next(p for p in profiles if p.mode == mode)
+        feasible_any = any(
+            tx_seconds(q.payload_bytes, orch.state.capacity_ema) <= budget
+            for q in profiles)
+        if feasible_any:
+            # hysteresis may hold a smaller-payload mode, never a larger
+            # infeasible one
+            assert (tx_seconds(p.payload_bytes, orch.state.capacity_ema)
+                    <= budget
+                    or p.payload_bytes == min(q.payload_bytes
+                                              for q in profiles)
+                    or p.mode == 2)
+
+
+@given(st.integers(0, 10_000))
+@settings(**SETTINGS)
+def test_channel_deterministic_and_positive(seed):
+    cfg = ChannelConfig(seed=seed)
+    t1 = Channel(cfg).trace(50)
+    t2 = Channel(cfg).trace(50)
+    np.testing.assert_array_equal(t1, t2)
+    assert (t1 > 0).all()
+
+
+# ---------------------------------------------------------------------------
+# roofline parsing
+# ---------------------------------------------------------------------------
+
+@given(st.integers(1, 64), st.integers(1, 64), st.sampled_from(
+    ["f32", "bf16", "s8"]))
+@settings(**SETTINGS)
+def test_shape_bytes_parser(m, n, dt):
+    per = {"f32": 4, "bf16": 2, "s8": 1}[dt]
+    s = f"{dt}[{m},{n}]{{1,0}}"
+    assert roofline._shape_bytes(s) == m * n * per
+
+
+@given(st.integers(1, 100), st.integers(1, 100))
+@settings(**SETTINGS)
+def test_roofline_dominant_term(flops_scale, bytes_scale):
+    t = roofline.roofline_terms(flops_scale * 1e12, bytes_scale * 1e9,
+                                0.0, 256)
+    assert t["dominant"] in ("compute_s", "memory_s")
+    assert t["bound_s"] == max(t["compute_s"], t["memory_s"],
+                               t["collective_s"])
+
+
+# ---------------------------------------------------------------------------
+# sharding-spec fitting (the activation-policy machinery of §Perf)
+# ---------------------------------------------------------------------------
+
+_ABS_MESH = jax.sharding.AbstractMesh((2, 4, 8), ("pod", "data", "model"))
+
+
+@given(st.integers(1, 512), st.sampled_from(
+    [("pod",), ("pod", "data"), ("pod", "data", "model"), ("model",)]))
+@settings(**SETTINGS)
+def test_fit_spec_always_divides(dim, axes):
+    from jax.sharding import PartitionSpec as P
+    from repro.models import sharding as SH
+    spec = SH._fit_spec(P(axes), (dim,), _ABS_MESH)
+    got = spec[0]
+    if got is not None:
+        assert dim % SH._axis_size(_ABS_MESH, got) == 0
+    # trimming never invents axes
+    if isinstance(got, tuple):
+        assert set(got) <= set(axes)
+
+
+@given(st.integers(1, 1024), st.sampled_from(["seq", "batch", "batch2d"]))
+@settings(**SETTINGS)
+def test_batch_pspec_always_valid(batch, policy):
+    from repro.models import sharding as SH
+    spec = SH.batch_pspec(_ABS_MESH, 2, batch, policy)
+    axes = spec[0]
+    if axes is not None:
+        assert batch % SH._axis_size(_ABS_MESH, axes) == 0
+
+
+@given(st.integers(2, 16), st.integers(1, 4), st.integers(8, 64))
+@settings(max_examples=10, deadline=None)
+def test_ep_capacity_positive_and_bounded(n_loc, k, d):
+    """EP capacity formula: positive, and slack capacity keeps every slot."""
+    from repro.models import moe_ep
+    E = 4
+    cap = max(int(8.0 * k * n_loc / E), 1)
+    assert cap >= 1
+    router_w = np.eye(d, E).astype(np.float32)
+    xg = jnp.asarray(np.random.default_rng(0).normal(size=(n_loc, d)),
+                     jnp.float32)
+    gates, idx, slot, keep, aux = moe_ep._route_local(
+        jnp.asarray(router_w), xg, min(k, E), cap, E)
+    assert bool(jnp.all(keep))               # slack capacity drops nothing
+    assert bool(jnp.all((slot >= 0) & (slot < cap)))
+    assert float(jnp.max(jnp.abs(jnp.sum(gates, -1) - 1.0))) < 1e-5

@@ -1,0 +1,135 @@
+"""The paper's technique: split model exactness, Algorithm 1 phase masks,
+cascade training, and the DPI/Ensure ordering."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, get_reduced
+from repro.configs.base import TrainConfig
+from repro.core import bottleneck as BN
+from repro.core import cascade as C
+from repro.core import split as SP
+from repro.data import lumos5g
+from repro.models import lstm as LSTM
+from repro.models import transformer as T
+
+
+def test_split_mode0_equals_full_forward():
+    cfg = get_reduced("granite-8b")
+    params = SP.init_split_params(jax.random.PRNGKey(0), cfg)
+    tok = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
+                             cfg.vocab_size)
+    full, _ = T.forward(params, tok, cfg)
+    split, _, info = SP.split_forward(params, tok, cfg, mode=0)
+    np.testing.assert_allclose(np.asarray(split), np.asarray(full),
+                               rtol=1e-4, atol=1e-4)
+    assert info["payload_bytes"] == 2 * 16 * cfg.d_model * 2
+
+
+def test_split_mode1_compresses_payload():
+    cfg = get_reduced("granite-8b")
+    assert BN.compression_ratio(cfg, 1) < 0.3
+    params = SP.init_split_params(jax.random.PRNGKey(0), cfg)
+    tok = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
+                             cfg.vocab_size)
+    logits, _, info1 = SP.split_forward(params, tok, cfg, mode=1)
+    _, _, info0 = SP.split_forward(params, tok, cfg, mode=0)
+    assert info1["payload_bytes"] < 0.3 * info0["payload_bytes"]
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_split_decode_matches_monolithic_mode0():
+    cfg = get_reduced("mixtral-8x7b")
+    params = SP.init_split_params(jax.random.PRNGKey(0), cfg)
+    B = 2
+    s1 = T.init_decode_state(cfg, B, 32)
+    s2 = T.init_decode_state(cfg, B, 32)
+    tok = jnp.zeros((B, 1), jnp.int32)
+    for t in range(4):
+        l_ref, s1 = T.decode_step(params, tok, s1, jnp.int32(t), cfg)
+        l_split, s2, _ = SP.split_decode_step(params, tok, s2, jnp.int32(t),
+                                              cfg, mode=0)
+        np.testing.assert_allclose(np.asarray(l_split), np.asarray(l_ref),
+                                   rtol=1e-4, atol=1e-4)
+        tok = jnp.argmax(l_ref, -1).astype(jnp.int32)
+
+
+def test_phase_mask_freezes_base_in_phase2():
+    cfg = get_reduced("stablelm-3b")
+    params = SP.init_split_params(jax.random.PRNGKey(0), cfg)
+    m1 = C.transformer_phase_mask(params, 1)
+    m2 = C.transformer_phase_mask(params, 2)
+    assert all(jax.tree.leaves(m1["layers"]))
+    assert not any(jax.tree.leaves(m2["layers"]))
+    assert not any(jax.tree.leaves(m1["bneck_modes"]))
+    assert all(jax.tree.leaves(m2["bneck_modes"][0]))
+
+
+def test_cascade_on_paper_lstm_poc():
+    """Run Algorithm 1 end-to-end on the (reduced) paper model with the
+    synthetic Lumos5G twin; phase 2 must NOT move frozen weights and the
+    Ensure ordering must hold."""
+    lcfg = get_reduced("lumos5g-lstm")
+    dcfg = lumos5g.Lumos5GConfig(n_samples=3000, seq_len=lcfg.seq_len,
+                                 seed=0)
+    data = lumos5g.generate(dcfg)
+    train, test = lumos5g.train_test_split(data, dcfg)
+    params = LSTM.init_params(jax.random.PRNGKey(0), lcfg)
+
+    def loss_fn(params, batch, mode):
+        return LSTM.loss_fn(params, batch, lcfg, mode)
+
+    it = lumos5g.batch_iterator(train, 128)
+    batches = [next(it) for _ in range(160)]
+
+    def data_iter(step):
+        b = batches[step % len(batches)]
+        return {"x": jnp.asarray(b["x"]), "y": jnp.asarray(b["y"])}
+
+    test_b = {"x": jnp.asarray(test["x"][:512]),
+              "y": jnp.asarray(test["y"][:512])}
+
+    def eval_fn(params, mode):
+        loss, m = LSTM.loss_fn(params, test_b, lcfg, mode)
+        return {"loss": loss, "acc": m["acc"]}
+
+    enc_before = None
+    tcfg = TrainConfig(learning_rate=5e-3, warmup_steps=5, total_steps=160,
+                       weight_decay=0.0)
+
+    def mask_fn(params, phase):
+        return LSTM.phase_mask(params, phase)
+
+    params, hist = C.train_cascade(
+        params, loss_fn, data_iter, tcfg, n_modes=2, steps_per_phase=80,
+        phase_mask_fn=mask_fn, eval_fn=eval_fn, verbose=False)
+
+    # mode 0 learned something (better than chance = -log(1/3) ~ 1.0986)
+    assert hist["phases"][0]["eval"]["loss"] < 1.05
+    # Ensure: mode 1 (bottleneck) at most as good as mode 0
+    assert hist["ensure"]["losses"][1] >= hist["ensure"]["losses"][0] - 0.02
+    # both modes beat chance accuracy
+    assert hist["ensure"]["accs"][1] > 0.40
+
+
+def test_cascade_phase2_frozen_weights_unchanged():
+    lcfg = get_reduced("lumos5g-lstm")
+    params = LSTM.init_params(jax.random.PRNGKey(0), lcfg)
+    from repro.training import optimizer as opt
+    tcfg = TrainConfig(learning_rate=1e-2, warmup_steps=1, total_steps=10)
+    step = C.make_train_step(
+        lambda p, b, m: LSTM.loss_fn(p, b, lcfg, m), tcfg)
+    state = opt.init(params)
+    batch = {"x": jnp.ones((8, lcfg.seq_len, lcfg.n_features)),
+             "y": jnp.zeros((8, lcfg.seq_len), jnp.int32)}
+    mask = LSTM.phase_mask(params, 2)
+    p2, _, _ = step(params, state, batch, mask, mode=1)
+    # encoder + decoder identical; bottleneck/adapter moved
+    for a, b in zip(jax.tree.leaves(params["enc"]), jax.tree.leaves(p2["enc"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    moved = any(
+        not np.allclose(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree.leaves(params["bneck"]),
+                        jax.tree.leaves(p2["bneck"])))
+    assert moved

@@ -1,0 +1,101 @@
+"""End-to-end behaviour tests for the paper's system."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.configs.base import TrainConfig
+from repro.core import bottleneck as BN
+from repro.core import split as SP
+from repro.core.channel import Channel, ChannelConfig
+from repro.core.orchestrator import (AppRequirement, ModeProfile,
+                                     Orchestrator)
+from repro.data import tokens
+from repro.serving.engine import ServingEngine
+from repro.training import loop as L
+
+
+def test_tiny_transformer_training_improves():
+    cfg = get_reduced("qwen2.5-3b")
+    params = SP.init_split_params(jax.random.PRNGKey(0), cfg)
+    src = tokens.MarkovTokenSource(cfg, alphabet=32)
+    tcfg = TrainConfig(learning_rate=3e-3, warmup_steps=5, total_steps=40)
+    params, hist = L.train_loop(params, cfg, tcfg,
+                                lambda s: src.batch(8, 16, s), steps=40,
+                                log_every=39)
+    assert hist[-1]["loss"] < hist[0]["loss"] - 0.3
+
+
+def test_split_cascade_training_transformer():
+    """Algorithm 1 on a reduced transformer: phase 2 trains the bottleneck
+    to usable quality while the base stays frozen."""
+    from repro.core import cascade as C
+    cfg = get_reduced("stablelm-3b")
+    params = SP.init_split_params(jax.random.PRNGKey(0), cfg)
+    src = tokens.MarkovTokenSource(cfg, alphabet=16)
+
+    def loss_fn(params, batch, mode):
+        logits, aux, _ = SP.split_forward(params, batch["tokens"], cfg,
+                                          mode, train=True)
+        from repro.models.transformer import lm_loss
+        loss = lm_loss(logits, batch["labels"])
+        return loss + 0.01 * aux, {"acc": jnp.mean(
+            jnp.argmax(logits, -1) == batch["labels"])}
+
+    def data_iter(step):
+        return {k: jnp.asarray(v) for k, v in src.batch(8, 16, step).items()}
+
+    eval_b = data_iter(9999)
+
+    def eval_fn(params, mode):
+        loss, m = loss_fn(params, eval_b, mode)
+        return {"loss": loss, "acc": m["acc"]}
+
+    tcfg = TrainConfig(learning_rate=3e-3, warmup_steps=5, total_steps=120,
+                       weight_decay=0.0)
+    params, hist = C.train_cascade(
+        params, loss_fn, data_iter, tcfg, n_modes=2, steps_per_phase=60,
+        eval_fn=eval_fn, verbose=False)
+    p1, p2 = hist["phases"]
+    assert p1["log"][-1]["loss"] < p1["log"][0]["loss"]
+    assert p2["log"][-1]["loss"] < p2["log"][0]["loss"] + 0.05
+    assert hist["ensure"]["losses"][1] >= hist["ensure"]["losses"][0] - 0.05
+
+
+def test_orchestrator_switches_under_blockage():
+    """When the simulated mmWave link drops into NLoS, the orchestrator must
+    fall back to the compressed mode, and recover afterwards."""
+    cfg = get_reduced("granite-8b")
+    payload0 = BN.mode_payload_bytes(cfg, 4, 128, 0)    # a 128-token query
+    payload1 = BN.mode_payload_bytes(cfg, 4, 128, 1)
+    profiles = [ModeProfile(0, payload0, 1.0), ModeProfile(1, payload1, 1.3)]
+    orch = Orchestrator(profiles, AppRequirement(latency_budget_s=0.02),
+                        hysteresis=1.0)
+    ch = Channel(ChannelConfig(mean_mbps=80.0, std_mbps=10.0,
+                               blockage_prob=0.0, seed=1))
+    modes = []
+    for t in range(60):
+        ch.blocked = 20 <= t < 40       # scripted blockage window
+        orch.observe_capacity(ch.step())
+        modes.append(orch.choose_mode())
+    assert set(modes[5:20]) == {0}           # LoS: full code
+    assert 1 in set(modes[20:40])            # blockage: compressed code
+    assert modes[-1] == 0                    # recovery
+    assert orch.state.switches >= 2
+
+
+def test_split_serving_counts_wire_bytes():
+    cfg = get_reduced("qwen2.5-3b")
+    params = SP.init_split_params(jax.random.PRNGKey(0), cfg)
+    profiles = [ModeProfile(0, BN.mode_payload_bytes(cfg, 1, 1, 0), 1.0),
+                ModeProfile(1, BN.mode_payload_bytes(cfg, 1, 1, 1), 1.2)]
+    orch = Orchestrator(profiles, AppRequirement(latency_budget_s=1.0))
+    eng = ServingEngine(params, cfg, cache_len=16, batch=2,
+                        orchestrator=orch)
+    eng.prefill(jnp.ones((2, 2), jnp.int32))
+    eng.decode_tokens(jnp.ones((2, 1), jnp.int32), 6,
+                      capacity_bps_fn=lambda: 1e9)
+    assert eng.stats.tokens == 12          # 2 requests x 6 decode steps
+    assert eng.stats.wire_bytes > 0
+    assert sum(eng.stats.mode_counts.values()) == 6   # one decision per step
