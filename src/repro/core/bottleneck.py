@@ -69,6 +69,75 @@ def decode(head, codes, scales, bits: int, dtype=jnp.bfloat16):
     return dense_apply(head["up"], z.astype(dtype))
 
 
+def bank_stack(bank, split: SplitConfig):
+    """Pad every head to the widest bottleneck and stack the bank into one
+    pytree of [M, ...] arrays so a jitted decode step can *gather* the head
+    for each batch slot (mixed-mode continuous batching) instead of
+    branching in Python.
+
+    Down-projection columns (and up-projection rows) beyond a head's true
+    width are zero, so padded lanes carry exact zeros through quantization
+    and contribute nothing to the adapter output — numerically identical to
+    running that head unpadded.
+    """
+    modes = mode_widths(split)
+    if not bank:
+        raise ValueError("bank_stack needs at least one bottleneck head")
+    wmax = max(w for w, _ in modes)
+    downs, ups, norms, widths, bits = [], [], [], [], []
+    for head, (w, b) in zip(bank, modes):
+        dw = head["down"]["w"]                      # [d, w]
+        uw = head["up"]["w"]                        # [w, d]
+        downs.append(jnp.pad(dw, ((0, 0), (0, wmax - w))))
+        ups.append(jnp.pad(uw, ((0, wmax - w), (0, 0))))
+        norms.append(head["norm"]["scale"])
+        widths.append(w)
+        bits.append(b)
+    return {
+        "down_w": jnp.stack(downs),                 # [M, d, wmax]
+        "up_w": jnp.stack(ups),                     # [M, wmax, d]
+        "norm_scale": jnp.stack(norms),             # [M, d]
+        "width": jnp.asarray(widths, jnp.int32),    # [M]
+        "bits": jnp.asarray(bits, jnp.int32),       # [M]
+    }
+
+
+def boundary_mixed(stacked, x, mode_idx, *, dtype=jnp.bfloat16):
+    """Per-slot bottleneck at the split boundary inside one jitted step.
+
+    x: [B, 1, d] boundary activation; mode_idx: [B] int32 in [0, M] where 0
+    means "transmit the raw code z" and m >= 1 routes slot b through
+    bottleneck head m-1 (gathered from the stacked bank). Simulates the
+    wire round-trip (quantize -> dequantize) with each slot's own bit
+    width. Returns the decoder-side activation [B, 1, d].
+    """
+    eps = 1e-6
+    hid = jnp.clip(mode_idx - 1, 0, stacked["width"].shape[0] - 1)  # [B]
+    # layer A: per-slot rmsnorm + down-projection
+    xf = x.astype(jnp.float32)
+    h = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    h = h * stacked["norm_scale"][hid][:, None, :].astype(jnp.float32)
+    z = jnp.einsum("bsd,bdw->bsw", h.astype(x.dtype),
+                   stacked["down_w"][hid]).astype(jnp.float32)
+    lane = jnp.arange(z.shape[-1])
+    z = jnp.where(lane[None, None, :] < stacked["width"][hid][:, None, None],
+                  z, 0.0)
+    # wire: row-wise symmetric quantization with per-slot bit width
+    # (bits == 0 modes ship the code unquantized, so the roundtrip is skipped)
+    bits_h = stacked["bits"][hid][:, None, None]
+    qm = jnp.maximum(
+        jnp.left_shift(1, jnp.maximum(bits_h, 1) - 1) - 1, 1
+    ).astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(z), axis=-1, keepdims=True)
+    scale = jnp.maximum(absmax, 1e-8) / qm
+    codes = jnp.clip(jnp.round(z / scale), -qm, qm)
+    wired = jnp.where(bits_h == 0, z, codes * scale)
+    # layer B: up-projection adapter back into the decoder width
+    y = jnp.einsum("bsw,bwd->bsd", wired.astype(dtype),
+                   stacked["up_w"][hid])
+    return jnp.where(mode_idx[:, None, None] == 0, x, y.astype(x.dtype))
+
+
 def mode_payload_bytes(cfg: ModelConfig, batch: int, seq: int, mode: int) -> int:
     """Wire bytes for one boundary transfer in the given mode."""
     if mode == 0:

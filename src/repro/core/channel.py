@@ -60,6 +60,32 @@ class Channel:
         return np.array([self.step() for _ in range(n_ticks)])
 
 
+def channel_fleet(n: int, cfg: ChannelConfig = None, *, seed: int = 0,
+                  mean_spread: float = 0.5) -> list:
+    """``n`` independent per-user links for continuous-batching serving.
+
+    Each user gets their own AR(1)/blockage process (distinct sub-seed) and a
+    mean uplink drawn log-uniformly within ``[1-mean_spread, 1+mean_spread]``
+    of the base config — cell-edge users coexist with beam-center users, so
+    a mixed decode batch genuinely wants mixed bottleneck modes.
+    """
+    base = cfg if cfg is not None else ChannelConfig()
+    rng = np.random.default_rng(seed)
+    out = []
+    for i in range(n):
+        scale = float(np.exp(rng.uniform(np.log(max(1 - mean_spread, 0.05)),
+                                         np.log(1 + mean_spread))))
+        out.append(Channel(dataclasses.replace(
+            base,
+            mean_mbps=base.mean_mbps * scale,
+            std_mbps=base.std_mbps * scale,
+            # scale the capacity floor down with the mean, else the floor
+            # clamps every cell-edge user to the same capacity
+            min_mbps=base.min_mbps * min(scale, 1.0),
+            seed=seed * 1_000_003 + i + 1)))
+    return out
+
+
 def tx_seconds(payload_bytes: int, capacity_bps: float,
                rtt_seconds: float = 0.004) -> float:
     """Transfer latency for one boundary payload."""

@@ -5,12 +5,30 @@ Policy: among the calibrated modes, pick the most relevant (lowest expected
 loss) whose transfer latency fits the application's budget, with hysteresis
 to avoid mode flapping. This is the "optimization/search problem" framing the
 paper suggests in Sec. VI.
+
+Two usage levels:
+
+* **Shared link** (the original API): ``observe_capacity(bps)`` +
+  ``choose_mode()`` track one EMA'd capacity for the whole deployment —
+  fine when every request rides the same simulated channel.
+* **Per-request links** (continuous-batching serving): each in-flight
+  request has its *own* mmWave link, so the orchestrator keeps one
+  ``LinkState`` per request id — ``register(rid)``, then
+  ``observe_capacity(bps, rid=rid)`` / ``choose_mode(rid=rid)`` /
+  ``release(rid)``. Mode-relevance feedback (``observe_decoder_loss``)
+  stays shared: decoder quality per mode is a property of the calibrated
+  cascade, not of any one user's channel.
+
+Cold start: before the first capacity observation the link quality is
+*unknown*, not zero — ``choose_mode`` is optimistic and picks the most
+relevant mode meeting the accuracy floor instead of silently deeming every
+mode infeasible and pinning the smallest payload.
 """
 from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, Hashable, List, Optional
 
 from repro.core.channel import tx_seconds
 
@@ -31,66 +49,111 @@ class AppRequirement:
 
 
 @dataclass
-class OrchestratorState:
+class LinkState:
+    """Per-link (per-request, or shared-legacy) orchestration state."""
     mode: int = 0
     capacity_ema: float = 0.0
-    loss_ema: Dict[int, float] = field(default_factory=dict)
     switches: int = 0
     ticks: int = 0
 
 
+@dataclass
+class OrchestratorState(LinkState):
+    """Legacy shared state; ``loss_ema`` aliases the orchestrator-wide
+    relevance feedback so existing callers keep working."""
+    loss_ema: Dict[int, float] = field(default_factory=dict)
+
+
 class Orchestrator:
     def __init__(self, profiles: List[ModeProfile],
-                 requirement: AppRequirement = AppRequirement(),
+                 requirement: Optional[AppRequirement] = None,
                  *, ema: float = 0.8, hysteresis: float = 0.85):
         if not profiles:
             raise ValueError("need at least one mode profile")
         self.profiles = sorted(profiles, key=lambda p: p.mode)
-        self.req = requirement
+        # a fresh instance per orchestrator: a dataclass default instance
+        # would be shared (and mutated) across constructions
+        self.req = (dataclasses.replace(requirement) if requirement is not None
+                    else AppRequirement())
         self.ema = ema
         self.hysteresis = hysteresis
         self.state = OrchestratorState(
             mode=self.profiles[0].mode,
             loss_ema={p.mode: p.expected_loss for p in self.profiles})
+        self.loss_ema = self.state.loss_ema      # shared relevance feedback
+        self._links: Dict[Hashable, LinkState] = {}
+        self._reqs: Dict[Hashable, AppRequirement] = {}
+
+    # -- per-request lifecycle ------------------------------------------------
+    def register(self, rid: Hashable,
+                 requirement: Optional[AppRequirement] = None) -> LinkState:
+        """Start tracking a request's own link (idempotent)."""
+        if rid not in self._links:
+            self._links[rid] = LinkState(mode=self.profiles[0].mode)
+            if requirement is not None:
+                self._reqs[rid] = dataclasses.replace(requirement)
+        return self._links[rid]
+
+    def release(self, rid: Hashable) -> None:
+        self._links.pop(rid, None)
+        self._reqs.pop(rid, None)
+
+    def _link(self, rid: Optional[Hashable]) -> LinkState:
+        if rid is None:
+            return self.state
+        return self.register(rid)
+
+    def _req(self, rid: Optional[Hashable]) -> AppRequirement:
+        if rid is None:
+            return self.req
+        return self._reqs.get(rid, self.req)
 
     # -- feedback signals (Fig. 3 arrows) ------------------------------------
-    def observe_capacity(self, capacity_bps: float):
-        s = self.state
+    def observe_capacity(self, capacity_bps: float,
+                         rid: Optional[Hashable] = None):
+        s = self._link(rid)
         s.capacity_ema = (self.ema * s.capacity_ema
                           + (1 - self.ema) * capacity_bps
                           if s.ticks else capacity_bps)
         s.ticks += 1
 
     def observe_decoder_loss(self, mode: int, loss: float):
-        prev = self.state.loss_ema.get(mode, loss)
-        self.state.loss_ema[mode] = self.ema * prev + (1 - self.ema) * loss
+        prev = self.loss_ema.get(mode, loss)
+        self.loss_ema[mode] = self.ema * prev + (1 - self.ema) * loss
 
     # -- decision -------------------------------------------------------------
-    def feasible(self, p: ModeProfile, capacity_bps: float) -> bool:
+    def feasible(self, p: ModeProfile, capacity_bps: float,
+                 req: Optional[AppRequirement] = None) -> bool:
+        req = req if req is not None else self.req
         return tx_seconds(p.payload_bytes, capacity_bps) \
-            <= self.req.latency_budget_s
+            <= req.latency_budget_s
 
-    def choose_mode(self) -> int:
-        cap = self.state.capacity_ema
+    def choose_mode(self, rid: Optional[Hashable] = None) -> int:
+        s = self._link(rid)
+        req = self._req(rid)
+        cap = s.capacity_ema
         # rank by relevance (EMA loss asc); most informative feasible wins
-        ranked = sorted(self.profiles,
-                        key=lambda p: self.state.loss_ema[p.mode])
+        ranked = sorted(self.profiles, key=lambda p: self.loss_ema[p.mode])
         chosen: Optional[ModeProfile] = None
         for p in ranked:
-            if self.req.min_acc and p.expected_acc < self.req.min_acc:
+            if req.min_acc and p.expected_acc < req.min_acc:
                 continue
-            if self.feasible(p, cap):
+            # cold start: no capacity observed yet -> optimistic (the first
+            # observation will correct us next tick); never pin the smallest
+            # payload off a phantom zero-capacity reading
+            if s.ticks == 0 or self.feasible(p, cap, req):
                 chosen = p
                 break
         if chosen is None:           # nothing fits: smallest payload
             chosen = min(self.profiles, key=lambda p: p.payload_bytes)
         # hysteresis: only leave the current mode if the alternative's
         # required capacity clears by a margin
-        cur = next(p for p in self.profiles if p.mode == self.state.mode)
-        if chosen.mode != cur.mode and chosen.payload_bytes > cur.payload_bytes:
-            if not self.feasible(chosen, cap * self.hysteresis):
+        cur = next(p for p in self.profiles if p.mode == s.mode)
+        if s.ticks and chosen.mode != cur.mode \
+                and chosen.payload_bytes > cur.payload_bytes:
+            if not self.feasible(chosen, cap * self.hysteresis, req):
                 chosen = cur
-        if chosen.mode != self.state.mode:
-            self.state.switches += 1
-            self.state.mode = chosen.mode
-        return self.state.mode
+        if chosen.mode != s.mode:
+            s.switches += 1
+            s.mode = chosen.mode
+        return s.mode

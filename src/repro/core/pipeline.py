@@ -16,8 +16,9 @@ The collective-permute operand size in the compiled HLO IS the paper's
 Split *learning* across the link uses straight-through-estimator semantics:
 the forward wire carries int8 codes; the backward wire carries the gradient
 of the boundary activation — float by default (what the paper implies), or
-int8 with ``bwd_bits=8`` (beyond paper; see EXPERIMENTS.md §Perf pair C
-iteration 3). Implemented as a ``jax.custom_vjp`` around the
+int8 with ``bwd_bits=8`` (beyond paper; ``tests/test_pipeline_pods.py``
+pins the compressed-wire collective bytes). Implemented as a
+``jax.custom_vjp`` around the
 quantize -> ppermute -> dequantize segment.
 """
 from __future__ import annotations
@@ -55,11 +56,11 @@ def _make_wire(bits: int, perm, axis: str = "pod", bwd_bits: int = 0):
     quantizer, as in QAT split learning).
 
     ``bwd_bits``: ALSO quantize the backward boundary gradient (beyond
-    paper — §Perf pair C found the f32 gradient dominates the wire once the
-    forward is compressed; this closes the gap toward the theoretical 8x).
+    paper — the f32 gradient dominates the wire once the forward is
+    compressed; this closes the gap toward the theoretical 8x).
     Plain rowwise-absmax quantized gradients, no error feedback — the
     residual-error accumulator would live on the UE across steps and is
-    noted as further work in DESIGN.md."""
+    noted as an open item in ROADMAP.md."""
     rev = [(d, s) for (s, d) in perm]
 
     @jax.custom_vjp
@@ -104,21 +105,24 @@ def pipeline_apply(stage_layers, bneck_head, x, positions,
     perm = [(i, i + 1) for i in range(n_stages - 1)]
     wire = _make_wire(bits, perm, bwd_bits=bwd_bits)
 
-    def inner(stage_layers, head_f32, x_f32, pos):
+    def inner(stage_ids, stage_layers, head_f32, x_f32, pos):
         # inside the manual `pod` region the outer mesh's NamedShardings are
         # invalid (pod axis is Manual here) — drop activation constraints for
         # the duration of this trace and let GSPMD keep propagating
         # data/model shardings from the operands
         with sharding.activation_rules(None, {}):
-            return _inner_body(stage_layers, head_f32, x_f32, pos)
+            return _inner_body(stage_ids, stage_layers, head_f32, x_f32, pos)
 
-    def _inner_body(stage_f32, head_f32, x_f32, pos):
-        stage = jax.lax.axis_index("pod")
+    def _inner_body(stage_ids, stage_f32, head_f32, x_f32, pos):
+        # the stage id rides in as a P('pod')-sharded iota instead of
+        # jax.lax.axis_index: under partially-auto shard_map older XLA
+        # lowers axis_index on a manual axis to a PartitionId instruction
+        # the SPMD partitioner rejects
+        stage = stage_ids[0]
         # inputs (incl. the pod-replicated stage weights) enter in fp32 —
         # XLA CPU aborts on the bf16 psum their cotangents need; compute
         # stays in bf16. The batch dim is MANUALLY sharded over `data`
-        # (replicating it — the first version — cost 63 GiB/device temp,
-        # EXPERIMENTS.md §Perf pair C).
+        # (replicating it — the first version — cost 63 GiB/device temp).
         my_layers = jax.tree.map(lambda a: a[0].astype(dtype)
                                  if jnp.issubdtype(a.dtype, jnp.floating)
                                  else a[0], stage_f32)           # [L/2, ...]
@@ -175,17 +179,19 @@ def pipeline_apply(stage_layers, bneck_head, x, positions,
         aux = jax.lax.pmean(aux, "data")
         return out, aux
 
-    shmap = jax.shard_map(
+    shmap = sharding.shard_map(
         inner, mesh=mesh,
-        in_specs=(P("pod"), P(), P("data", None, None), P("data", None)),
+        in_specs=(P("pod"), P("pod"), P(), P("data", None, None),
+                  P("data", None)),
         out_specs=(P("data", None, None), P()),
-        axis_names={"pod", "data"}, check_vma=False)
+        axis_names={"pod", "data"}, check=False)
     def f32(t):
         return jax.tree.map(lambda a: a.astype(jnp.float32)
                             if jnp.issubdtype(a.dtype, jnp.floating) else a,
                             t)
     head_f32 = f32(bneck_head if bneck_head is not None else {})
-    out, aux = shmap(f32(stage_layers), head_f32, x.astype(jnp.float32),
+    out, aux = shmap(jnp.arange(n_stages, dtype=jnp.int32),
+                     f32(stage_layers), head_f32, x.astype(jnp.float32),
                      positions)
     return out.astype(dtype), aux
 

@@ -1,5 +1,6 @@
 """Quantized tensor-parallel prefill — the paper's insight applied to the
-intra-layer TP boundary (beyond-paper, see EXPERIMENTS.md §Perf pair A).
+intra-layer TP boundary (beyond-paper; ``benchmarks/bench_roofline.py``
+measures the transfer terms this targets).
 
 The paper compresses the ONE split-learning boundary (bottleneck + int8)
 because it crosses the weakest link. Under Megatron-style TP the residual
@@ -146,12 +147,12 @@ def qtp_forward(params, tokens, cfg: ModelConfig, *, mesh, bits: int = 8,
         out, _ = jax.lax.scan(block, x_loc, layers_l)
         return out
 
-    shmap = jax.shard_map(
+    shmap = sharding.shard_map(
         inner, mesh=mesh,
         in_specs=(_specs_for(layers, wspec), P(dp, "model", None),
                   P(dp, None)),
         out_specs=P(dp, "model", None),
-        check_vma=False)
+        check=False)
 
     with sharding.activation_rules(None, {}):
         xb = shmap(layers, x, positions)

@@ -61,13 +61,19 @@ ste_quantize.defvjp(_ste_fwd, _ste_bwd)
 
 def payload_bytes(shape, bits: int, dtype_bytes: int = 2) -> int:
     """Wire bytes for a latent of ``shape`` ([..., d]): packed codes +
-    one fp16 scale per row (bits==0 -> raw bf16 payload)."""
+    one fp16 scale per row (bits==0 -> raw bf16 payload).
+
+    Codes pack per *row*, not per tensor: each row of ``d`` sub-byte codes
+    is padded up to a whole byte (an int4 row with odd ``d`` carries a
+    trailing nibble on the wire), so the orchestrator's feasibility math
+    matches the real packed format.
+    """
     import math
     n = math.prod(shape)
     if bits == 0:
         return n * dtype_bytes
     rows = n // shape[-1]
-    return n * bits // 8 + rows * 2
+    return rows * math.ceil(shape[-1] * bits / 8) + rows * 2
 
 
 def quant_error(x, bits: int = 8) -> jnp.ndarray:

@@ -150,3 +150,45 @@ def split_decode_step(params, token, states, cur_pos, cfg: ModelConfig,
         new_states = tuple(enc_new) + tuple(dec_new)
     pb = bottleneck.mode_payload_bytes(cfg, B, 1, mode)
     return logits, new_states, pb
+
+
+def split_decode_step_mixed(params, stacked_bank, token, states, positions,
+                            cfg: ModelConfig, mode_idx):
+    """One decode step for a *mixed-mode* continuous batch.
+
+    Unlike :func:`split_decode_step`, every batch slot decodes at its own
+    sequence depth (``positions``: [B] int32 absolute positions) and through
+    its own orchestrator-chosen bottleneck (``mode_idx``: [B] int32, 0 = raw
+    code z, m >= 1 = head m-1 gathered from ``stacked_bank``; see
+    ``bottleneck.bank_stack``). The whole step is one jittable function —
+    mode selection is a gather, not a Python branch, so a single compiled
+    executable serves any mode mixture.
+
+    Per-slot wire bytes are host-side accounting (they depend only on the
+    static mode table, not on traced values) — see
+    ``bottleneck.mode_payload_bytes(cfg, 1, 1, mode)`` per slot.
+    Returns (logits, new_states).
+    """
+    s = cfg.split.split_at
+    x = T.embed_tokens(params, token, cfg, None)
+    enc_l, dec_l = slice_layers(params["layers"], cfg, s)
+    if cfg.homogeneous:
+        enc_st = jax.tree.map(lambda a: a[:s], states)
+        dec_st = jax.tree.map(lambda a: a[s:], states)
+    else:
+        enc_st, dec_st = states[:s], states[s:]
+    kinds = _kinds(cfg)
+    x, enc_new = T.run_layers_decode(enc_l, x, enc_st, positions, cfg,
+                                     kinds=kinds[:s])
+    x = bottleneck.boundary_mixed(stacked_bank, x, mode_idx,
+                                  dtype=T.model_dtype(cfg))
+    x, dec_new = T.run_layers_decode(dec_l, x, dec_st, positions, cfg,
+                                     kinds=kinds[s:])
+    x = T.norm_apply_final(params, x, cfg)
+    logits = T.lm_logits(params, x, cfg)
+    if cfg.homogeneous:
+        new_states = jax.tree.map(
+            lambda a, b: jnp.concatenate([a, b], axis=0), enc_new, dec_new)
+    else:
+        new_states = tuple(enc_new) + tuple(dec_new)
+    return logits, new_states

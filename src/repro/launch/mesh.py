@@ -8,6 +8,18 @@ from __future__ import annotations
 import jax
 
 
+def mesh_context(mesh):
+    """Enter ``mesh`` as the ambient mesh, across JAX versions.
+
+    Newer JAX exposes ``jax.set_mesh``; on older releases
+    ``jax.sharding.Mesh`` is itself the context manager.
+    """
+    set_mesh = getattr(jax, "set_mesh", None)
+    if set_mesh is not None:
+        return set_mesh(mesh)
+    return mesh
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """Single pod: 16x16 = 256 chips (data, model).
     Multi-pod: 2 pods x 256 = 512 chips (pod, data, model)."""

@@ -1,13 +1,15 @@
-"""Production serving launcher: batched requests through the split engine
-with the orchestrator picking the transmit mode per token from a simulated
-mmWave channel trace (the paper's Fig. 3/5 loop, runnable end to end).
+"""Production serving launcher: requests through the split engine with the
+orchestrator picking the transmit mode from simulated mmWave channels (the
+paper's Fig. 3/5 loop, runnable end to end).
 
+    # synchronous static batch (legacy engine)
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b --reduced \
         --requests 4 --prompt-len 16 --gen 32
-    PYTHONPATH=src python -m repro.launch.serve --arch xlstm-125m --reduced \
-        --policy static0            # always send the full-width code z
+    # continuous batching: per-request channels, per-slot bottleneck modes
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b --reduced \
+        --engine continuous --requests 16 --n-slots 4 --arrival-every 2
 
-Policies:
+Policies (sync engine):
   orchestrator  paper's dynamic policy (channel + loss feedback, hysteresis)
   static0       always mode 0 (raw boundary, most informative)
   static1       always mode 1 (bottleneck z', cheapest)
@@ -25,14 +27,15 @@ import numpy as np
 from repro.configs import ARCH_IDS, get_config, get_reduced
 from repro.core import bottleneck
 from repro.core import split as SP
-from repro.core.channel import Channel, ChannelConfig, tx_seconds
+from repro.core.channel import Channel, ChannelConfig, channel_fleet
 from repro.core.orchestrator import AppRequirement, ModeProfile, Orchestrator
 from repro.data import tokens
-from repro.serving.engine import ServingEngine
+from repro.serving import ContinuousBatchingEngine, Request, ServingEngine
 from repro.training import checkpoint
 
 
-def build_orchestrator(cfg, batch: int, latency_budget_s: float):
+def build_orchestrator(cfg, batch: int, latency_budget_s: float,
+                       *, hysteresis: float = 0.85):
     """Mode profiles from the analytic payload model (calibration stands in
     for the cascade validation losses on untrained smoke weights)."""
     profiles = []
@@ -41,36 +44,53 @@ def build_orchestrator(cfg, batch: int, latency_budget_s: float):
         profiles.append(ModeProfile(mode=m, payload_bytes=pb,
                                     expected_loss=float(m)))  # DPI ordering
     return Orchestrator(profiles,
-                        AppRequirement(latency_budget_s=latency_budget_s))
+                        AppRequirement(latency_budget_s=latency_budget_s),
+                        hysteresis=hysteresis)
 
 
-def main(argv=None):
-    ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--arch", required=True, choices=ARCH_IDS)
-    ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--requests", type=int, default=4,
-                    help="batch of concurrent requests")
-    ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--gen", type=int, default=32)
-    ap.add_argument("--cache-len", type=int, default=128)
-    ap.add_argument("--policy", default="orchestrator",
-                    choices=["orchestrator", "static0", "static1"])
-    ap.add_argument("--latency-budget-ms", type=float, default=5.0)
-    ap.add_argument("--channel-seed", type=int, default=0)
-    ap.add_argument("--ckpt", default=None)
-    ap.add_argument("--json-out", default=None)
-    args = ap.parse_args(argv)
+def run_continuous(args, cfg, params):
+    orch = build_orchestrator(cfg, 1, args.latency_budget_ms / 1e3,
+                              hysteresis=1.0)
+    chans = channel_fleet(
+        args.requests,
+        ChannelConfig(mean_mbps=args.mean_mbps, std_mbps=args.mean_mbps / 2,
+                      blockage_prob=0.06, recovery_prob=0.2,
+                      seed=args.channel_seed),
+        seed=args.channel_seed, mean_spread=0.9)
+    src = tokens.MarkovTokenSource(cfg, seed=7)
+    batch = src.batch(args.requests, args.prompt_len)["tokens"]
+    reqs = [Request(rid=i, prompt=np.asarray(batch[i]),
+                    max_new_tokens=args.gen, channel=chans[i],
+                    arrival_tick=i * args.arrival_every)
+            for i in range(args.requests)]
+    eng = ContinuousBatchingEngine(params, cfg, n_slots=args.n_slots,
+                                   cache_len=args.cache_len,
+                                   orchestrator=orch)
+    # warm the compiled prefill/decode paths so decode_tok_per_s measures
+    # steady-state serving (the sync engine likewise excludes its one-time
+    # prefill/trace cost from the decode rate)
+    warm = Request(rid=-1, prompt=np.asarray(batch[0]), max_new_tokens=2,
+                   channel=None)
+    eng.run([warm])
+    eng.finished.clear()
+    eng.tick = 0
+    eng.decode_ticks = eng.mode_mix_ticks = 0
+    eng.queue.submitted = eng.queue.rejected = 0
 
-    cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
-    print(f"== launch.serve {args.arch} "
-          f"({'reduced' if args.reduced else 'FULL'}) "
-          f"batch={args.requests} prompt={args.prompt_len} gen={args.gen} "
-          f"policy={args.policy} ==")
-    params = SP.init_split_params(jax.random.PRNGKey(0), cfg)
-    if args.ckpt:
-        params = checkpoint.restore(args.ckpt, params)
-        print(f"loaded weights from {args.ckpt}")
+    t0 = time.time()
+    done = eng.run(reqs)
+    wall = time.time() - t0
+    st = eng.stats()
+    return {
+        "engine": "continuous",
+        "n_slots": args.n_slots,
+        "decode_tok_per_s": round(st["decode_tokens"] / max(wall, 1e-9), 1),
+        "per_request": [s.result() for s in done[:4]],
+        **st,
+    }
 
+
+def run_sync(args, cfg, params):
     orch = None
     if args.policy == "orchestrator":
         orch = build_orchestrator(cfg, args.requests,
@@ -112,13 +132,53 @@ def main(argv=None):
     t_total = time.time() - t0
 
     toks = args.requests * args.gen
-    summary = {
-        "arch": args.arch, "policy": args.policy,
+    return {
+        "engine": "sync", "policy": args.policy,
         "prefill_s": round(t_prefill, 2),
         "decode_tok_per_s": round(toks / max(t_total - t_prefill, 1e-9), 1),
         "wire_bytes_per_token": stats["wire_bytes"] / max(toks, 1),
         **stats,
     }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", required=True, choices=ARCH_IDS)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--engine", default="sync",
+                    choices=["sync", "continuous"])
+    ap.add_argument("--requests", type=int, default=4,
+                    help="number of requests (sync: the batch size)")
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--cache-len", type=int, default=128)
+    ap.add_argument("--policy", default="orchestrator",
+                    choices=["orchestrator", "static0", "static1"])
+    ap.add_argument("--latency-budget-ms", type=float, default=5.0)
+    ap.add_argument("--channel-seed", type=int, default=0)
+    ap.add_argument("--n-slots", type=int, default=4,
+                    help="continuous engine: decode slot pool size")
+    ap.add_argument("--arrival-every", type=int, default=2,
+                    help="continuous engine: ticks between request arrivals")
+    ap.add_argument("--mean-mbps", type=float, default=40.0,
+                    help="continuous engine: fleet mean uplink")
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--json-out", default=None)
+    args = ap.parse_args(argv)
+
+    cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
+    print(f"== launch.serve {args.arch} "
+          f"({'reduced' if args.reduced else 'FULL'}) "
+          f"engine={args.engine} requests={args.requests} "
+          f"prompt={args.prompt_len} gen={args.gen} ==")
+    params = SP.init_split_params(jax.random.PRNGKey(0), cfg)
+    if args.ckpt:
+        params = checkpoint.restore(args.ckpt, params)
+        print(f"loaded weights from {args.ckpt}")
+
+    summary = (run_continuous if args.engine == "continuous"
+               else run_sync)(args, cfg, params)
+    summary = {"arch": args.arch, **summary}
     print(json.dumps(summary, indent=1, default=str))
     if args.json_out:
         with open(args.json_out, "w") as f:

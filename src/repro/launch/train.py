@@ -34,6 +34,7 @@ from repro.configs.base import ModelConfig, TrainConfig
 from repro.core import cascade as CC
 from repro.core import split as SP
 from repro.data import tokens
+from repro.launch.mesh import mesh_context
 from repro.models import sharding
 from repro.training import checkpoint
 from repro.training import loop as L
@@ -58,7 +59,7 @@ def sharded_init(cfg: ModelConfig, mesh, seed: int = 0):
     out_sh = jax.tree.map(lambda sp: NamedSharding(mesh, sp), specs)
     init = jax.jit(lambda k: SP.init_split_params(k, cfg),
                    out_shardings=out_sh)
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         return init(jax.random.PRNGKey(seed)), specs
 
 
@@ -70,7 +71,7 @@ def run_phase(params, cfg, tcfg, mesh, specs, data_fn, *, steps, mode,
     jitted = jax.jit(step_fn, donate_argnums=(0, 1) if donate else ())
     hist = []
     t0 = time.time()
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         for s in range(steps):
             batch = {k: jnp.asarray(v) for k, v in data_fn(s).items()}
             params, opt_state, m = jitted(params, opt_state, batch)
@@ -130,7 +131,7 @@ def main(argv=None):
             return L.make_eval_step(cfg, mode=mode)(p, b)
 
         n_modes = cfg.split.n_modes
-        with jax.set_mesh(mesh):
+        with mesh_context(mesh):
             params, hist = CC.train_cascade(
                 params, loss_fn,
                 lambda s: {k: jnp.asarray(v) for k, v in data_fn(s).items()},

@@ -175,53 +175,59 @@ def decode_attention(p, x, cache, cur_pos, *, n_q: int, n_kv: int, hd: int,
                      rope_theta: float, window: int = 0):
     """One-token decode against the cache.
 
-    x: [B, 1, d]; cur_pos: scalar int32 — absolute position of the new token
-    (all sequences aligned, as in synchronous batched serving).
+    x: [B, 1, d]; cur_pos: scalar int32 (all sequences aligned, as in
+    synchronous batched serving) or a [B] vector of per-sequence absolute
+    positions (continuous batching: each slot is at its own depth).
     Returns (out [B,1,d], updated cache).
     """
     B = x.shape[0]
     cache_len = cache["k"].shape[1]
     q, k, v = _project_qkv(p, x, n_q, n_kv, hd)
-    pos = jnp.full((B, 1), cur_pos, dtype=jnp.int32)
+    cur_pos = jnp.asarray(cur_pos, dtype=jnp.int32)
+    ragged = cur_pos.ndim == 1
+    pos = cur_pos.reshape(B, 1) if ragged \
+        else jnp.full((B, 1), cur_pos, dtype=jnp.int32)
     q = apply_rope(q, pos, rope_theta)
     k = apply_rope(k, pos, rope_theta)
 
-    slot = jnp.mod(cur_pos, cache_len)            # rolling for SWA
+    slot = jnp.mod(pos[:, 0], cache_len) if ragged \
+        else jnp.mod(cur_pos, cache_len)          # rolling for SWA
+
+    def store(buf, new):
+        """Write the new token's row at each sequence's own cache slot."""
+        if ragged:
+            return buf.at[jnp.arange(B), slot].set(new[:, 0])
+        return jax.lax.dynamic_update_slice_in_dim(buf, new, slot, axis=1)
+
     quantized = "k_s" in cache
     if quantized:
         from repro.core import quant as Q
         kq, ks = Q.quantize(k, 8)
         vq, vs = Q.quantize(v, 8)
         new_cache = {
-            "k": jax.lax.dynamic_update_slice_in_dim(cache["k"], kq, slot,
-                                                     axis=1),
-            "k_s": jax.lax.dynamic_update_slice_in_dim(cache["k_s"], ks,
-                                                       slot, axis=1),
-            "v": jax.lax.dynamic_update_slice_in_dim(cache["v"], vq, slot,
-                                                     axis=1),
-            "v_s": jax.lax.dynamic_update_slice_in_dim(cache["v_s"], vs,
-                                                       slot, axis=1),
+            "k": store(cache["k"], kq),
+            "k_s": store(cache["k_s"], ks),
+            "v": store(cache["v"], vq),
+            "v_s": store(cache["v_s"], vs),
         }
         ck = (new_cache["k"].astype(jnp.float32) * new_cache["k_s"]
               ).astype(k.dtype)
         cv = (new_cache["v"].astype(jnp.float32) * new_cache["v_s"]
               ).astype(v.dtype)
     else:
-        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot, axis=1)
-        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot, axis=1)
+        ck = store(cache["k"], k)
+        cv = store(cache["v"], v)
 
     scores = _gqa_scores(q, ck) / math.sqrt(hd)   # [B,kv,G,1,T]
     # slot t holds absolute position: t if t<=slot else t + cache_len*(n_wraps)
     # validity: a slot is attendable iff its absolute position is in
-    # (cur_pos - effective_window, cur_pos].
+    # (cur_pos - effective_window, cur_pos]. With the rolling cache of size
+    # cache_len == min(window, ctx) every written slot is within the window
+    # by construction, so the mask reduces to "has been written".
     t = jnp.arange(cache_len)
-    n_fill = jnp.minimum(cur_pos + 1, cache_len)  # number of valid slots
-    written = t < n_fill if window == 0 else jnp.ones_like(t, dtype=bool)
-    if window:
-        # with rolling cache of size cache_len == min(window, ctx) every
-        # written slot is within the window by construction
-        written = t < n_fill
-    scores = jnp.where(written[None, None, None, None, :], scores, NEG_INF)
+    n_fill = jnp.minimum(pos[:, 0] + 1, cache_len)    # valid slots per seq
+    written = t[None, :] < n_fill[:, None]            # [B, T]
+    scores = jnp.where(written[:, None, None, None, :], scores, NEG_INF)
     probs = jax.nn.softmax(scores, axis=-1)
     out = _gqa_out(probs, cv).astype(x.dtype)
     return out @ p["wo"]["w"], (new_cache if quantized

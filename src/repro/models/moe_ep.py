@@ -36,6 +36,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.models import sharding
 from repro.models.layers import _act
 
 
@@ -133,10 +134,10 @@ def moe_apply_ep(p, x, *, k: int, act: str = "silu",
         aux = jax.lax.pmean(aux, dp + ("model",))
         return y.reshape(x_loc.shape).astype(x_loc.dtype), aux
 
-    shmap = jax.shard_map(
+    shmap = sharding.shard_map(
         inner, mesh=mesh,
         in_specs=(P(), P("model"), P("model"), P("model"),
                   P(dp, "model", None)),
         out_specs=(P(dp, "model", None), P()),
-        check_vma=False)
+        check=False)
     return shmap(p["router"]["w"], p["w_gate"], p["w_up"], p["w_down"], x)

@@ -19,6 +19,31 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None,
+              check: bool = False):
+    """``jax.shard_map`` across JAX versions.
+
+    Newer JAX exposes it at top level with ``check_vma`` / ``axis_names``
+    (the set of *manual* axes); older releases have
+    ``jax.experimental.shard_map.shard_map`` with ``check_rep`` / ``auto``
+    (the complementary set of axes left automatic). Partially-manual
+    ``auto`` subgroups CHECK-fail inside old XLA's SPMD partitioner, so the
+    legacy path runs fully manual instead: axes the caller wanted automatic
+    must then not appear in any spec, and their compute stays local and
+    replicated — numerically identical, just without GSPMD re-sharding.
+    """
+    native = getattr(jax, "shard_map", None)
+    if native is not None:
+        kw = dict(mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_vma=check)
+        if axis_names is not None:
+            kw["axis_names"] = set(axis_names)
+        return native(f, **kw)
+    from jax.experimental.shard_map import shard_map as legacy
+    return legacy(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_rep=check)
+
+
 # ---------------------------------------------------------------------------
 # activation-constraint context
 # ---------------------------------------------------------------------------

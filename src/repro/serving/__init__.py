@@ -1,0 +1,17 @@
+"""Split-serving subsystem.
+
+``engine.ServingEngine``      — synchronous single-batch engine (one static
+                                batch, one mode per token for the whole
+                                batch); kept for examples/smoke tests.
+``batcher.ContinuousBatchingEngine`` — slot-pooled continuous batching with
+                                per-request channels and per-slot bottleneck
+                                modes inside one jitted decode step.
+``session``                   — request/queue/session lifecycle records.
+
+See docs/serving.md for the request lifecycle and slot-pool design.
+"""
+from repro.serving.batcher import (ContinuousBatchingEngine,  # noqa: F401
+                                   SlotPool)
+from repro.serving.engine import GenStats, ServingEngine  # noqa: F401
+from repro.serving.session import (Request, RequestQueue,  # noqa: F401
+                                   Session)

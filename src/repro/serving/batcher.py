@@ -1,0 +1,292 @@
+"""Continuous-batching split-serving: slot pool + mixed-mode decode loop.
+
+The engine keeps a fixed pool of ``n_slots`` decode slots (KV caches /
+recurrent states allocated once, recycled as sequences finish). Every engine
+tick it:
+
+1. admits pending requests from the bounded queue into free slots (each
+   admission prefetches the prompt through a batch-1 prefill and scatters
+   the resulting state into the slot);
+2. steps each active request's *own* simulated mmWave channel, lets the
+   shared orchestrator pick that request's bottleneck mode from its link
+   EMA, and
+3. runs ONE jitted mixed-mode decode step for the whole pool — per-slot
+   positions (sequences are at different depths) and per-slot mode indices
+   (the bottleneck head is a gather over the stacked mode bank, not a
+   Python branch), so a single compiled executable serves any mode mixture;
+4. accounts uplink bytes and simulated transfer latency per request and
+   retires finished sessions, freeing their slots.
+
+Free slots still ride through the decode step (the batch shape is static for
+jit); their outputs are ignored and their state is fully overwritten at the
+next admission.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import bottleneck
+from repro.core import split as SP
+from repro.core.channel import Channel, tx_seconds
+from repro.core.orchestrator import Orchestrator
+from repro.models import transformer as T
+from repro.serving.session import Request, RequestQueue, Session
+
+
+def _slot_axis(cfg: ModelConfig) -> int:
+    # homogeneous archs stack per-layer states into [L, B, ...] leaves;
+    # heterogeneous archs keep a tuple of per-layer [B, ...] pytrees
+    return 1 if cfg.homogeneous else 0
+
+
+@functools.partial(jax.jit, static_argnums=(3,))
+def _scatter_slot(pool_states, one_states, slot, axis: int):
+    return jax.tree.map(
+        lambda p, o: jax.lax.dynamic_update_slice_in_dim(p, o, slot,
+                                                         axis=axis),
+        pool_states, one_states)
+
+
+class SlotPool:
+    """Fixed pool of decode slots with recycled cache/recurrent state."""
+
+    def __init__(self, cfg: ModelConfig, n_slots: int, cache_len: int):
+        self.cfg = cfg
+        self.n_slots = n_slots
+        self.cache_len = cache_len
+        self.states = T.init_decode_state(cfg, n_slots, cache_len)
+        self.positions = np.zeros(n_slots, np.int32)
+        self._free = list(range(n_slots - 1, -1, -1))
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    def acquire(self) -> Optional[int]:
+        return self._free.pop() if self._free else None
+
+    def release(self, slot: int):
+        assert slot not in self._free
+        self.positions[slot] = 0
+        self._free.append(slot)
+
+    def write(self, slot: int, one_states, pos: int):
+        """Install a freshly prefilled batch-1 state into ``slot`` (full
+        overwrite — whatever a previous occupant left behind is gone)."""
+        self.states = _scatter_slot(self.states, one_states,
+                                    jnp.int32(slot), _slot_axis(self.cfg))
+        self.positions[slot] = pos
+
+
+class ContinuousBatchingEngine:
+    """Split-inference engine with per-request dynamic bottleneck modes.
+
+    ``orchestrator`` is shared (mode calibration is global) but tracks one
+    link state per request id; ``default_channel`` serves requests that
+    arrive without their own ``Channel``.
+    """
+
+    def __init__(self, params, cfg: ModelConfig, *, n_slots: int = 8,
+                 cache_len: int = 128,
+                 orchestrator: Optional[Orchestrator] = None,
+                 default_channel: Optional[Channel] = None,
+                 max_pending: int = 64):
+        self.params = params
+        self.cfg = cfg
+        self.orch = orchestrator
+        self.default_channel = default_channel
+        self.pool = SlotPool(cfg, n_slots, cache_len)
+        self.queue = RequestQueue(max_pending)
+        self.active: Dict[int, Session] = {}          # slot -> session
+        self.finished: List[Session] = []
+        self.tick = 0
+        self.mode_mix_ticks = 0       # decode ticks with >= 2 distinct modes
+        self.decode_ticks = 0
+        bank = params.get("bneck_modes") or ()
+        self.stacked_bank = (bottleneck.bank_stack(bank, cfg.split)
+                             if len(bank) else None)
+        self._tok_shape = ((n_slots, cfg.n_codebooks, 1)
+                           if cfg.frontend == "audio" and cfg.n_codebooks > 1
+                           else (n_slots, 1))
+        self.cur_tokens = np.zeros(self._tok_shape, np.int32)
+        self._pending: List[Request] = []             # not yet "arrived"
+
+        @jax.jit
+        def mono_step(params, tok, states, pos):
+            return T.decode_step(params, tok, states, pos, cfg)
+        self._mono_step = mono_step
+
+        if self.stacked_bank is not None:
+            @jax.jit
+            def mixed_step(params, stacked, tok, states, positions, modes):
+                return SP.split_decode_step_mixed(params, stacked, tok,
+                                                  states, positions, cfg,
+                                                  modes)
+            self._mixed_step = mixed_step
+        else:
+            self._mixed_step = None
+
+    # -- submission -----------------------------------------------------------
+    def submit(self, req: Request) -> bool:
+        """Queue a request for its arrival tick. Returns False if the
+        admission queue rejected it (back-pressure)."""
+        if req.arrival_tick > self.tick:
+            self._pending.append(req)
+            return True
+        return self.queue.submit(req)
+
+    def _deliver_arrivals(self):
+        due = [r for r in self._pending if r.arrival_tick <= self.tick]
+        self._pending = [r for r in self._pending
+                         if r.arrival_tick > self.tick]
+        for r in sorted(due, key=lambda r: r.arrival_tick):
+            self.queue.submit(r)
+
+    # -- admission ------------------------------------------------------------
+    def _prefill_one(self, prompt: np.ndarray):
+        """Batch-1 prefill via repeated decode steps (exact for attention
+        caches and recurrent states alike). Returns (first_token, states)."""
+        states = T.init_decode_state(self.cfg, 1, self.pool.cache_len)
+        toks = jnp.asarray(prompt)[None]              # [1, S] / [1, K, S]
+        logits = None
+        for t in range(toks.shape[-1]):
+            logits, states = self._mono_step(self.params, toks[..., t:t + 1],
+                                             states, jnp.int32(t))
+        first = np.asarray(jnp.argmax(logits, axis=-1), np.int32)  # [1, ...]
+        return first, states
+
+    def _admit(self):
+        while self.pool.n_free and len(self.queue):
+            req = self.queue.pop()
+            slot = self.pool.acquire()
+            sess = Session(request=req, slot=slot, admitted_tick=self.tick)
+            if req.channel is None:
+                req.channel = self.default_channel
+            mode = 0
+            if self.orch is not None:
+                self.orch.register(req.rid, req.requirement)
+                if req.channel is not None:
+                    self.orch.observe_capacity(req.channel.step(),
+                                               rid=req.rid)
+                if self._mixed_step is not None:
+                    mode = self.orch.choose_mode(rid=req.rid)
+            first, one_states = self._prefill_one(req.prompt)
+            self.pool.write(slot, one_states, req.prompt_len)
+            self.cur_tokens[slot] = first[0]
+            sess.pos = req.prompt_len
+            # the prompt's boundary activations cross the uplink once, in
+            # the admission-chosen mode
+            pb = bottleneck.mode_payload_bytes(self.cfg, 1, req.prompt_len,
+                                               mode)
+            sess.prefill_wire_bytes = pb
+            sess.wire_bytes += pb
+            self.active[slot] = sess
+
+    # -- decode ---------------------------------------------------------------
+    def _choose_modes(self) -> np.ndarray:
+        modes = np.zeros(self.pool.n_slots, np.int32)
+        for slot, sess in self.active.items():
+            mode = 0
+            if self.orch is not None:
+                rid = sess.request.rid
+                cap = None
+                if sess.request.channel is not None:
+                    cap = sess.request.channel.step()
+                    self.orch.observe_capacity(cap, rid=rid)
+                if self._mixed_step is not None:
+                    mode = self.orch.choose_mode(rid=rid)
+                # else: no bottleneck bank in params — the decode path can
+                # only transmit the raw boundary, so account mode 0 rather
+                # than charging for compression that never runs
+                pb = bottleneck.mode_payload_bytes(self.cfg, 1, 1, mode)
+                link = self.orch.register(rid)
+                sess.account(mode, pb,
+                             tx_seconds(pb, cap if cap is not None
+                                        else link.capacity_ema))
+            else:
+                pb = bottleneck.mode_payload_bytes(self.cfg, 1, 1, 0)
+                sess.account(0, pb, 0.0)
+            modes[slot] = mode
+        return modes
+
+    def step(self) -> bool:
+        """One engine tick: admit, then one mixed-mode decode step over the
+        pool. Returns False when there is nothing left to do."""
+        self._deliver_arrivals()
+        self._admit()
+        if not self.active:
+            if self._pending:          # idle until the next arrival
+                self.tick = min(r.arrival_tick for r in self._pending)
+                return True
+            return False
+
+        modes = self._choose_modes()
+        positions = jnp.asarray(self.pool.positions)
+        toks = jnp.asarray(self.cur_tokens)
+        if self._mixed_step is not None:
+            logits, new_states = self._mixed_step(
+                self.params, self.stacked_bank, toks, self.pool.states,
+                positions, jnp.asarray(modes))
+        else:                          # no bottleneck bank: raw mode only
+            logits, new_states = self._mono_step(self.params, toks,
+                                                 self.pool.states, positions)
+        self.pool.states = new_states
+        nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+
+        self.decode_ticks += 1
+        if len({int(m) for s, m in enumerate(modes) if s in self.active}) > 1:
+            self.mode_mix_ticks += 1
+
+        for slot in list(self.active):
+            sess = self.active[slot]
+            tok = nxt[slot]
+            sess.tokens.append(int(tok.reshape(-1)[0]) if tok.ndim
+                               else int(tok))
+            self.cur_tokens[slot] = tok
+            self.pool.positions[slot] += 1
+            sess.pos += 1
+            if sess.done:
+                sess.finished_tick = self.tick
+                if self.orch is not None:
+                    self.orch.release(sess.request.rid)
+                del self.active[slot]
+                self.pool.release(slot)
+                self.finished.append(sess)
+        self.tick += 1
+        return True
+
+    def run(self, requests: Optional[List[Request]] = None,
+            max_ticks: int = 100_000) -> List[Session]:
+        """Drive the engine until every submitted request completes (or the
+        tick budget runs out). Returns the finished sessions."""
+        for r in requests or []:
+            self.submit(r)
+        for _ in range(max_ticks):
+            if not self.step():
+                break
+        return self.finished
+
+    # -- aggregate stats ------------------------------------------------------
+    def stats(self) -> dict:
+        toks = sum(len(s.tokens) for s in self.finished)
+        wire = sum(s.wire_bytes for s in self.finished)
+        mix: Dict[int, int] = {}
+        for s in self.finished:
+            for m, c in s.mode_counts.items():
+                mix[m] = mix.get(m, 0) + c
+        return {
+            "requests_finished": len(self.finished),
+            "requests_rejected": self.queue.rejected,
+            "decode_tokens": toks,
+            "wire_bytes": wire,
+            "wire_bytes_per_token": wire / max(toks, 1),
+            "mode_counts": mix,
+            "decode_ticks": self.decode_ticks,
+            "mixed_mode_ticks": self.mode_mix_ticks,
+        }

@@ -1,13 +1,19 @@
-"""Batched serving engine with split-mode support.
+"""Synchronous batched serving engine with split-mode support.
 
-``prefill`` feeds the prompt through ``decode_step`` under ``lax.scan`` —
+This is the *static-batch* engine: one batch of aligned sequences, one
+orchestrator-chosen mode per token applied to the whole batch. It remains
+the simplest runnable loop (examples, smoke tests, the dry-run's
+``serve_step`` lowering). Production-shaped serving — request queue,
+slot-pooled state recycling, per-request channels and per-slot bottleneck
+modes in one jitted step — lives in ``repro.serving.batcher``
+(``ContinuousBatchingEngine``), with the request lifecycle records in
+``repro.serving.session``.
+
+``prefill`` feeds the prompt through ``decode_step`` token by token —
 exact for every architecture family (attention caches and recurrent states
 update identically to decode), which keeps one code path for all 10 archs.
-``generate`` then decodes with the orchestrator-selected bottleneck mode,
-accounting the bytes that cross the UE->edge boundary per token.
-
-The dry-run lowers ``serve_step`` (one token against a seq_len-deep state)
-via ``launch.dryrun``; this module is the runnable CPU-scale engine.
+``decode_tokens`` then decodes with the orchestrator-selected bottleneck
+mode, accounting the bytes that cross the UE->edge boundary per token.
 """
 from __future__ import annotations
 

@@ -1,0 +1,99 @@
+"""Request lifecycle for the continuous-batching split-serving engine.
+
+A ``Request`` is what the UE submits: a prompt, a generation budget, and —
+because this is *split* serving — the user's own simulated mmWave link and
+(optionally) their application's latency/accuracy requirement. The engine
+admits requests from a bounded ``RequestQueue`` into decode slots; each
+admitted request becomes a ``Session`` that records, per generated token,
+which bottleneck mode the orchestrator chose for *this* user's channel and
+what it cost on the wire.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.channel import Channel
+from repro.core.orchestrator import AppRequirement
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                 # [S] tokens (or [K, S] for audio)
+    max_new_tokens: int = 32
+    channel: Optional[Channel] = None  # this user's uplink (None: engine default)
+    requirement: Optional[AppRequirement] = None
+    arrival_tick: int = 0              # engine tick at which the UE submits
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.prompt.shape[-1])
+
+
+@dataclass
+class Session:
+    """One admitted request bound to a decode slot."""
+    request: Request
+    slot: int
+    admitted_tick: int = 0
+    pos: int = 0                       # absolute position of the next token
+    tokens: List[int] = field(default_factory=list)
+    wire_bytes: int = 0                # uplink boundary bytes, this request
+    prefill_wire_bytes: int = 0
+    transfer_s: float = 0.0            # accumulated simulated link latency
+    mode_counts: Dict[int, int] = field(default_factory=dict)
+    finished_tick: int = -1
+
+    @property
+    def done(self) -> bool:
+        return len(self.tokens) >= self.request.max_new_tokens
+
+    def account(self, mode: int, payload_bytes: int, tx_s: float):
+        self.wire_bytes += payload_bytes
+        self.transfer_s += tx_s
+        self.mode_counts[mode] = self.mode_counts.get(mode, 0) + 1
+
+    def result(self) -> dict:
+        return {
+            "rid": self.request.rid,
+            "tokens": list(self.tokens),
+            "n_tokens": len(self.tokens),
+            "wire_bytes": self.wire_bytes,
+            "prefill_wire_bytes": self.prefill_wire_bytes,
+            "transfer_s": round(self.transfer_s, 6),
+            "mode_counts": dict(self.mode_counts),
+            "admitted_tick": self.admitted_tick,
+            "finished_tick": self.finished_tick,
+        }
+
+
+class RequestQueue:
+    """Bounded FIFO admission queue. ``submit`` rejects (returns False) when
+    the queue is full — back-pressure instead of unbounded memory growth
+    under heavy offered load."""
+
+    def __init__(self, max_pending: int = 64):
+        self.max_pending = max_pending
+        self._q: List[Request] = []
+        self.submitted = 0
+        self.rejected = 0
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    def submit(self, req: Request) -> bool:
+        if len(self._q) >= self.max_pending:
+            self.rejected += 1
+            return False
+        self._q.append(req)
+        self.submitted += 1
+        return True
+
+    def pop(self) -> Optional[Request]:
+        return self._q.pop(0) if self._q else None
+
+    def peek(self) -> Optional[Request]:
+        return self._q[0] if self._q else None

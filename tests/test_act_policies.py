@@ -12,7 +12,10 @@ from repro.models import sharding
 
 @pytest.fixture(scope="module")
 def mesh():
-    return jax.sharding.AbstractMesh((2, 2), ("data", "model"))
+    try:
+        return jax.sharding.AbstractMesh((("data", 2), ("model", 2)))
+    except TypeError:   # older signature: (shape, axis_names)
+        return jax.sharding.AbstractMesh((2, 2), ("data", "model"))
 
 
 def test_batch_pspec_policies(mesh):

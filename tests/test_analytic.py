@@ -33,6 +33,8 @@ def test_analytic_fwd_flops_vs_xla(arch):
         return T.forward(p, t, cfg)[0]
 
     cost = jax.jit(fwd).lower(params, toks).compile().cost_analysis()
+    if isinstance(cost, (list, tuple)):   # older JAX: one dict per device
+        cost = cost[0]
     xla_flops = float(cost["flops"])
     sc = ShapeConfig("tiny", seq_len=S, global_batch=B, kind="prefill")
     ours = analytic.step_flops(cfg, sc)

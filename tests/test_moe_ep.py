@@ -12,6 +12,7 @@ import os
 os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count=8'
 import jax, jax.numpy as jnp
 jax.config.update("jax_default_matmul_precision", "highest")
+from repro.launch.mesh import mesh_context
 from repro.models import moe, moe_ep
 
 mesh = jax.make_mesh((2, 4), ('data', 'model'))
@@ -29,7 +30,7 @@ assert not moe_ep.moe_supports_ep(E, None, 8, 16)
 
 # forward equivalence at slack capacity (no dropped tokens)
 y_ref, aux_ref = moe.moe_apply(p, x, k=k, capacity_factor=8.0)
-with jax.set_mesh(mesh):
+with mesh_context(mesh):
     y_ep, aux_ep = jax.jit(lambda p, x: moe_ep.moe_apply_ep(
         p, x, k=k, capacity_factor=8.0, mesh=mesh))(p, x)
 err = float(jnp.max(jnp.abs(y_ref - y_ep)))
@@ -46,7 +47,7 @@ def loss(fn):
         y, _ = fn(p, x)
         return jnp.sum(y ** 2)
     return f
-with jax.set_mesh(mesh):
+with mesh_context(mesh):
     g_ep = jax.jit(jax.grad(loss(lambda p, x: moe_ep.moe_apply_ep(
         p, x, k=k, capacity_factor=8.0, mesh=mesh))))(p, x)
 g_ref = jax.grad(loss(lambda p, x: moe.moe_apply(
@@ -59,7 +60,7 @@ assert gerr < 1e-3, f'grad err {gerr}'
 # oracle per batch row) but the drop volume must be comparable and the
 # output finite
 y_ref, _ = moe.moe_apply(p, x, k=k, capacity_factor=1.0)
-with jax.set_mesh(mesh):
+with mesh_context(mesh):
     y_ep, _ = jax.jit(lambda p, x: moe_ep.moe_apply_ep(
         p, x, k=k, capacity_factor=1.0, mesh=mesh))(p, x)
 assert bool(jnp.all(jnp.isfinite(y_ep)))

@@ -1,0 +1,99 @@
+"""Orchestrator unit tests: cold start, hysteresis, min_acc filtering, and
+per-request link isolation."""
+import pytest
+
+from repro.core.channel import tx_seconds
+from repro.core.orchestrator import (AppRequirement, ModeProfile,
+                                     Orchestrator)
+
+PROFILES = [ModeProfile(0, 100_000, 1.0, 0.9),
+            ModeProfile(1, 10_000, 1.2, 0.8),
+            ModeProfile(2, 1_000, 1.5, 0.7)]
+
+
+def make(**kw):
+    kw.setdefault("requirement", AppRequirement(latency_budget_s=0.05))
+    return Orchestrator([ModeProfile(p.mode, p.payload_bytes,
+                                     p.expected_loss, p.expected_acc)
+                         for p in PROFILES], **kw)
+
+
+def test_cold_start_is_optimistic():
+    """Before any capacity observation the orchestrator must NOT treat the
+    link as zero-capacity (which silently pinned the smallest payload);
+    it starts from the most relevant mode."""
+    orch = make()
+    assert orch.choose_mode() == 0
+    # and the first real observation takes over immediately (EMA bootstraps
+    # from the observation, not from 0.0)
+    orch.observe_capacity(1e3)       # terrible link
+    assert orch.state.capacity_ema == 1e3
+    assert orch.choose_mode() == 2
+
+
+def test_default_requirement_not_shared():
+    a = make(requirement=None)
+    b = make(requirement=None)
+    a.req.latency_budget_s = 123.0
+    assert b.req.latency_budget_s != 123.0
+    # nor is a caller-provided requirement aliased
+    req = AppRequirement(latency_budget_s=0.02)
+    c = Orchestrator(PROFILES, req)
+    req.latency_budget_s = 999.0
+    assert c.req.latency_budget_s == 0.02
+
+
+def test_hysteresis_no_flapping_on_boundary_oscillation():
+    """A capacity trace oscillating around mode 0's feasibility boundary
+    must not flap: with the hysteresis margin the orchestrator upgrades
+    only when the better mode clears by a clear margin."""
+    budget = 0.05
+    # mode 0 needs ~100_000/0.046 ≈ 2.17e6 B/s to fit the budget (rtt 4ms)
+    boundary = PROFILES[0].payload_bytes / (budget - 0.004)
+    orch = make(ema=0.0, hysteresis=0.8)   # ema 0: track raw capacity
+    orch.observe_capacity(boundary * 1.5)
+    assert orch.choose_mode() == 0
+    switches0 = orch.state.switches
+    # oscillate +/-5% around the boundary: within the 20% hysteresis band
+    for i in range(40):
+        orch.observe_capacity(boundary * (1.05 if i % 2 == 0 else 0.95))
+        orch.choose_mode()
+    # at most one downgrade (to mode 1 when capacity dips below) and no
+    # repeated up/down churn
+    assert orch.state.switches - switches0 <= 1
+
+
+def test_min_acc_filters_modes():
+    orch = make(requirement=AppRequirement(latency_budget_s=0.05,
+                                           min_acc=0.75))
+    orch.observe_capacity(1e6)      # mode 0 infeasible; 1 and 2 feasible
+    assert orch.choose_mode() == 1  # mode 2 violates the accuracy floor
+    orch2 = make(requirement=AppRequirement(latency_budget_s=0.05,
+                                            min_acc=0.95))
+    orch2.observe_capacity(1e9)
+    # no mode meets the floor: best-effort fallback, smallest payload
+    assert orch2.choose_mode() == 2
+
+
+def test_per_request_links_are_isolated():
+    orch = make(hysteresis=1.0)
+    orch.register("edge_user")
+    orch.register("center_user")
+    for _ in range(5):
+        orch.observe_capacity(5e4, rid="edge_user")     # 50 kB/s
+        orch.observe_capacity(1e8, rid="center_user")   # 100 MB/s
+    assert orch.choose_mode(rid="center_user") == 0
+    assert orch.choose_mode(rid="edge_user") == 2
+    # the legacy shared link is untouched by per-request traffic
+    assert orch.state.ticks == 0
+    orch.release("edge_user")
+    assert "edge_user" not in orch._links
+
+
+def test_decoder_loss_feedback_reorders_modes():
+    orch = make(ema=0.0, hysteresis=1.0)
+    orch.observe_capacity(1e9)              # everything feasible
+    assert orch.choose_mode() == 0
+    # decoder reports mode 0 regressing hard (e.g. distribution shift)
+    orch.observe_decoder_loss(0, 5.0)
+    assert orch.choose_mode() == 1

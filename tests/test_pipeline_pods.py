@@ -13,6 +13,7 @@ import functools
 import jax, jax.numpy as jnp
 from repro.configs import get_reduced
 from repro.core import split as S, pipeline as PL
+from repro.launch.mesh import mesh_context
 from repro.models import transformer as T
 
 mesh = jax.make_mesh((2, 2, 2), ('pod', 'data', 'model'))
@@ -20,7 +21,7 @@ cfg = get_reduced('stablelm-3b')
 params = S.init_split_params(jax.random.PRNGKey(0), cfg)
 tok = jax.random.randint(jax.random.PRNGKey(1), (8, 16), 0, cfg.vocab_size)
 
-with jax.set_mesh(mesh):
+with mesh_context(mesh):
     # mode 0: pipeline == monolithic forward (bf16 tolerance)
     fn0 = jax.jit(functools.partial(PL.pipeline_forward, cfg=cfg, mesh=mesh,
                                     n_micro=4, mode=0))

@@ -2,7 +2,10 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import quant
 from repro.core.channel import Channel, ChannelConfig, tx_seconds
@@ -125,7 +128,12 @@ def test_roofline_dominant_term(flops_scale, bytes_scale):
 # sharding-spec fitting (the activation-policy machinery of §Perf)
 # ---------------------------------------------------------------------------
 
-_ABS_MESH = jax.sharding.AbstractMesh((2, 4, 8), ("pod", "data", "model"))
+try:
+    _ABS_MESH = jax.sharding.AbstractMesh(
+        (("pod", 2), ("data", 4), ("model", 8)))
+except TypeError:   # older signature: (shape, axis_names)
+    _ABS_MESH = jax.sharding.AbstractMesh((2, 4, 8),
+                                          ("pod", "data", "model"))
 
 
 @given(st.integers(1, 512), st.sampled_from(

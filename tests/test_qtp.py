@@ -11,6 +11,7 @@ import jax, jax.numpy as jnp
 jax.config.update("jax_default_matmul_precision", "highest")
 from repro.configs import get_reduced
 from repro.core import split as S, qtp as QTP
+from repro.launch.mesh import mesh_context
 from repro.models import transformer as T
 
 mesh = jax.make_mesh((2, 4), ('data', 'model'))
@@ -23,7 +24,7 @@ for arch in ('stablelm-3b', 'granite-8b'):
     tok = jax.random.randint(jax.random.PRNGKey(1), (8, 32), 0,
                              cfg.vocab_size)
     ref, _ = T.forward(params, tok, cfg)
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         lg0 = jax.jit(lambda p, t: QTP.qtp_forward(
             p, t, cfg, mesh=mesh, bits=0))(params, tok)
         lg8 = jax.jit(lambda p, t: QTP.qtp_forward(
