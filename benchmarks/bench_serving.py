@@ -2,12 +2,17 @@
 
 Sweeps the request arrival rate into ``ContinuousBatchingEngine`` and
 reports, per offered-load level: decode tokens/s (engine wall clock),
-uplink wire-bytes/token, slot occupancy, and how often the decode batch was
-genuinely *mixed-mode* (>= 2 distinct bottleneck modes in the same jitted
-step) — the per-request-selection property that static-batch serving can't
-express.
+uplink prefill wire bytes and decode wire-bytes/token (reported separately
+so mode comparisons aren't skewed by prompt length), mean time-to-first-
+token, slot occupancy, and how often the decode batch was genuinely
+*mixed-mode* (>= 2 distinct bottleneck modes in the same jitted step) — the
+per-request-selection property that static-batch serving can't express.
 
-    PYTHONPATH=src python benchmarks/bench_serving.py [--arch qwen2.5-3b]
+Also times the admission hot path head to head: batched full-sequence
+prefill (one jitted call) vs the legacy token-at-a-time decode-step loop.
+
+    PYTHONPATH=src python benchmarks/bench_serving.py [--arch qwen2.5-3b] \
+        [--json BENCH_serving.json]
 """
 from __future__ import annotations
 
@@ -16,6 +21,7 @@ import json
 import time
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ARCH_IDS, get_reduced
@@ -24,6 +30,7 @@ from repro.core import split as SP
 from repro.core.channel import ChannelConfig, channel_fleet
 from repro.core.orchestrator import (AppRequirement, ModeProfile,
                                      Orchestrator)
+from repro.models import transformer as T
 from repro.serving import ContinuousBatchingEngine, Request
 
 
@@ -56,14 +63,10 @@ def run_level(params, cfg, *, n_requests: int, arrival_every: int,
                                    orchestrator=orch)
     reqs = make_requests(cfg, n_requests, prompt_len=prompt_len, gen=gen,
                          arrival_every=arrival_every)
-    # warm the compiled paths so the throughput number measures the steady
+    # warm every compiled path the measured run can hit (decode + each
+    # prefill batch bucket) so the throughput numbers measure the steady
     # state, not tracing
-    eng.run(make_requests(cfg, 1, prompt_len=prompt_len, gen=2,
-                          arrival_every=1, seed=99))
-    eng.finished.clear()
-    eng.decode_ticks = eng.mode_mix_ticks = 0
-    eng.tick = 0                      # keep the measured arrival schedule
-    eng.queue.submitted = eng.queue.rejected = 0
+    eng.warm(reqs[0].prompt)
 
     t0 = time.time()
     done = eng.run(reqs)
@@ -75,8 +78,16 @@ def run_level(params, cfg, *, n_requests: int, arrival_every: int,
         "requests": n_requests,
         "finished": st["requests_finished"],
         "rejected": st["requests_rejected"],
+        "over_capacity": st["requests_over_capacity"],
+        "truncated": st["requests_truncated"],
         "decode_tok_per_s": round(st["decode_tokens"] / max(wall, 1e-9), 1),
-        "wire_bytes_per_token": round(st["wire_bytes_per_token"], 1),
+        "prefill_wire_bytes": st["prefill_wire_bytes"],
+        "decode_wire_bytes_per_token": round(
+            st["decode_wire_bytes_per_token"], 1),
+        "mean_ttft_ms": round(1e3 * st["mean_ttft_s"], 2),
+        "prefill_calls": st["prefill_calls"],
+        "prefill_tokens": st["prefill_tokens"],
+        "prefill_tok_per_s": round(st["prefill_tokens"] / max(wall, 1e-9), 1),
         "mode_counts": st["mode_counts"],
         "mixed_mode_ticks": st["mixed_mode_ticks"],
         "decode_ticks": st["decode_ticks"],
@@ -84,6 +95,55 @@ def run_level(params, cfg, *, n_requests: int, arrival_every: int,
         "mean_transfer_ms_per_token": round(
             1e3 * float(np.mean([s.transfer_s / max(len(s.tokens), 1)
                                  for s in done])), 3) if done else 0.0,
+    }
+
+
+def time_prefill_paths(params, cfg, *, prompt_len: int, cache_len: int,
+                       repeats: int = 3) -> dict:
+    """Time-to-first-token, batched full-sequence prefill vs the legacy
+    token-at-a-time decode-step loop (both jitted and warmed)."""
+    rng = np.random.default_rng(0)
+    shape = ((1, cfg.n_codebooks, prompt_len)
+             if cfg.frontend == "audio" and cfg.n_codebooks > 1
+             else (1, prompt_len))
+    prompt = jnp.asarray(rng.integers(1, cfg.vocab_size,
+                                      size=shape).astype(np.int32))
+    lens = jnp.asarray([prompt_len], jnp.int32)
+
+    step = jax.jit(lambda p, t, s, pos: T.decode_step(p, t, s, pos, cfg))
+    pre = jax.jit(lambda p, t, s, l: T.prefill(p, t, cfg, s, lengths=l))
+
+    def loop_once():
+        states = T.init_decode_state(cfg, 1, cache_len)
+        logits = None
+        for t in range(prompt_len):
+            logits, states = step(params, prompt[..., t:t + 1], states,
+                                  jnp.int32(t))
+        return jax.block_until_ready(jnp.argmax(logits, -1))
+
+    def batched_once():
+        states = T.init_decode_state(cfg, 1, cache_len)
+        logits, _ = pre(params, prompt, states, lens)
+        return jax.block_until_ready(jnp.argmax(logits, -1))
+
+    loop_once(), batched_once()            # warm / trace
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        loop_once()
+        ts.append(time.perf_counter() - t0)
+    t_loop = min(ts)
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        batched_once()
+        ts.append(time.perf_counter() - t0)
+    t_batched = min(ts)
+    return {
+        "prompt_len": prompt_len,
+        "ttft_loop_ms": round(1e3 * t_loop, 3),
+        "ttft_batched_ms": round(1e3 * t_batched, 3),
+        "ttft_speedup": round(t_loop / max(t_batched, 1e-9), 2),
     }
 
 
@@ -97,13 +157,25 @@ def main(argv=None):
     ap.add_argument("--loads", default="8,2,1",
                     help="comma list of arrival spacings (ticks/request); "
                          "smaller = heavier offered load")
-    ap.add_argument("--json-out", default=None)
+    ap.add_argument("--prefill-prompt-len", type=int, default=64,
+                    help="prompt length for the batched-vs-loop TTFT "
+                         "comparison")
+    ap.add_argument("--json", "--json-out", dest="json_out", default=None,
+                    metavar="PATH", help="write the full result dict as JSON")
     args = ap.parse_args(argv)
 
     cfg = get_reduced(args.arch)
     params = SP.init_split_params(jax.random.PRNGKey(0), cfg)
     print(f"== bench_serving {args.arch} slots={args.n_slots} "
           f"requests={args.requests} gen={args.gen} ==")
+
+    pf = time_prefill_paths(params, cfg,
+                            prompt_len=args.prefill_prompt_len,
+                            cache_len=max(128, args.prefill_prompt_len + 8))
+    print(f"prefill,prompt={pf['prompt_len']},"
+          f"ttft_loop_ms={pf['ttft_loop_ms']} "
+          f"ttft_batched_ms={pf['ttft_batched_ms']} "
+          f"speedup={pf['ttft_speedup']}x")
 
     levels = []
     for spacing in [int(s) for s in args.loads.split(",")]:
@@ -113,15 +185,19 @@ def main(argv=None):
         levels.append(r)
         print(f"serving,load={r['offered_load_req_per_tick']},"
               f"tok/s={r['decode_tok_per_s']} "
-              f"wireB/tok={r['wire_bytes_per_token']} "
+              f"decode_wireB/tok={r['decode_wire_bytes_per_token']} "
+              f"prefill_wireB={r['prefill_wire_bytes']} "
+              f"ttft_ms={r['mean_ttft_ms']} "
+              f"prefills={r['prefill_calls']} "
               f"occ={r['slot_occupancy']} "
               f"mixed={r['mixed_mode_ticks']}/{r['decode_ticks']} "
               f"modes={r['mode_counts']}")
 
     mixed_any = any(r["mixed_mode_ticks"] > 0 for r in levels)
     print(f"serving_summary,mixed_mode_batches={'yes' if mixed_any else 'no'},"
-          f"levels={len(levels)}")
-    out = {"arch": args.arch, "n_slots": args.n_slots, "levels": levels}
+          f"levels={len(levels)},prefill_speedup={pf['ttft_speedup']}x")
+    out = {"arch": args.arch, "n_slots": args.n_slots,
+           "prefill_comparison": pf, "levels": levels}
     if args.json_out:
         with open(args.json_out, "w") as f:
             json.dump(out, f, indent=1)

@@ -125,6 +125,8 @@ def boundary_mixed(stacked, x, mode_idx, *, dtype=jnp.bfloat16):
     # wire: row-wise symmetric quantization with per-slot bit width
     # (bits == 0 modes ship the code unquantized, so the roundtrip is skipped)
     bits_h = stacked["bits"][hid][:, None, None]
+    # same floor-at-1 as quant.qmax: bits=1 is the ternary code, never a
+    # zero qmax (the two wire paths are pinned to agree by tests)
     qm = jnp.maximum(
         jnp.left_shift(1, jnp.maximum(bits_h, 1) - 1) - 1, 1
     ).astype(jnp.float32)

@@ -15,7 +15,11 @@ import jax.numpy as jnp
 
 
 def qmax(bits: int) -> int:
-    return (1 << (bits - 1)) - 1      # 127 for int8, 7 for int4
+    """127 for int8, 7 for int4 — floored at 1 so ``bits=1`` maps to the
+    ternary {-1, 0, 1} code instead of a zero qmax (which made the scale
+    infinite and the dequant NaN). ``bottleneck.boundary_mixed`` applies the
+    same floor; the two wire paths must agree."""
+    return max((1 << (bits - 1)) - 1, 1)
 
 
 def quantize(x, bits: int = 8):
@@ -72,8 +76,11 @@ def payload_bytes(shape, bits: int, dtype_bytes: int = 2) -> int:
     n = math.prod(shape)
     if bits == 0:
         return n * dtype_bytes
+    # bits=1 is the ternary {-1, 0, 1} code (see qmax's floor) — three
+    # states cannot pack at 1 bit/value, so charge the 2-bit packing
+    eff_bits = max(bits, 2)
     rows = n // shape[-1]
-    return rows * math.ceil(shape[-1] * bits / 8) + rows * 2
+    return rows * math.ceil(shape[-1] * eff_bits / 8) + rows * 2
 
 
 def quant_error(x, bits: int = 8) -> jnp.ndarray:

@@ -48,6 +48,21 @@ def _kinds(cfg: ModelConfig):
     return tuple(cfg.block_kind(i) for i in range(cfg.n_layers))
 
 
+def _split_states(states, cfg: ModelConfig, s: int):
+    """(encoder_states, decoder_states) views of the per-layer decode state."""
+    if cfg.homogeneous:
+        return (jax.tree.map(lambda a: a[:s], states),
+                jax.tree.map(lambda a: a[s:], states))
+    return states[:s], states[s:]
+
+
+def _merge_states(enc_new, dec_new, cfg: ModelConfig):
+    if cfg.homogeneous:
+        return jax.tree.map(
+            lambda a, b: jnp.concatenate([a, b], axis=0), enc_new, dec_new)
+    return tuple(enc_new) + tuple(dec_new)
+
+
 # ---------------------------------------------------------------------------
 # full-sequence split forward (training / prefill)
 # ---------------------------------------------------------------------------
@@ -123,11 +138,7 @@ def split_decode_step(params, token, states, cur_pos, cfg: ModelConfig,
     s = cfg.split.split_at
     x = T.embed_tokens(params, token, cfg, None)
     enc_l, dec_l = slice_layers(params["layers"], cfg, s)
-    if cfg.homogeneous:
-        enc_st = jax.tree.map(lambda a: a[:s], states)
-        dec_st = jax.tree.map(lambda a: a[s:], states)
-    else:
-        enc_st, dec_st = states[:s], states[s:]
+    enc_st, dec_st = _split_states(states, cfg, s)
     kinds = _kinds(cfg)
     x, enc_new = T.run_layers_decode(enc_l, x, enc_st, cur_pos, cfg,
                                      kinds=kinds[:s])
@@ -143,13 +154,8 @@ def split_decode_step(params, token, states, cur_pos, cfg: ModelConfig,
                                      kinds=kinds[s:])
     x = T.norm_apply_final(params, x, cfg)
     logits = T.lm_logits(params, x, cfg)
-    if cfg.homogeneous:
-        new_states = jax.tree.map(
-            lambda a, b: jnp.concatenate([a, b], axis=0), enc_new, dec_new)
-    else:
-        new_states = tuple(enc_new) + tuple(dec_new)
     pb = bottleneck.mode_payload_bytes(cfg, B, 1, mode)
-    return logits, new_states, pb
+    return logits, _merge_states(enc_new, dec_new, cfg), pb
 
 
 def split_decode_step_mixed(params, stacked_bank, token, states, positions,
@@ -172,11 +178,7 @@ def split_decode_step_mixed(params, stacked_bank, token, states, positions,
     s = cfg.split.split_at
     x = T.embed_tokens(params, token, cfg, None)
     enc_l, dec_l = slice_layers(params["layers"], cfg, s)
-    if cfg.homogeneous:
-        enc_st = jax.tree.map(lambda a: a[:s], states)
-        dec_st = jax.tree.map(lambda a: a[s:], states)
-    else:
-        enc_st, dec_st = states[:s], states[s:]
+    enc_st, dec_st = _split_states(states, cfg, s)
     kinds = _kinds(cfg)
     x, enc_new = T.run_layers_decode(enc_l, x, enc_st, positions, cfg,
                                      kinds=kinds[:s])
@@ -186,9 +188,82 @@ def split_decode_step_mixed(params, stacked_bank, token, states, positions,
                                      kinds=kinds[s:])
     x = T.norm_apply_final(params, x, cfg)
     logits = T.lm_logits(params, x, cfg)
-    if cfg.homogeneous:
-        new_states = jax.tree.map(
-            lambda a, b: jnp.concatenate([a, b], axis=0), enc_new, dec_new)
-    else:
-        new_states = tuple(enc_new) + tuple(dec_new)
-    return logits, new_states
+    return logits, _merge_states(enc_new, dec_new, cfg)
+
+
+# ---------------------------------------------------------------------------
+# batched full-sequence prefill (admission hot path)
+# ---------------------------------------------------------------------------
+
+def _prefill_through(params, tokens, cfg: ModelConfig, states, boundary,
+                     lengths):
+    """Shared whole-prompt prefill skeleton: encoder layers, ``boundary``
+    (the wire crossing), decoder layers — populating every layer's decode
+    state. Returns (last-real-position logits, new_states)."""
+    s = cfg.split.split_at
+    x = T.embed_tokens(params, tokens, cfg, None)
+    B, S = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    if lengths is not None:
+        lengths = jnp.asarray(lengths, jnp.int32)
+    enc_l, dec_l = slice_layers(params["layers"], cfg, s)
+    enc_st, dec_st = _split_states(states, cfg, s)
+    kinds = _kinds(cfg)
+    x, enc_new = T.run_layers_prefill(enc_l, x, positions, enc_st, cfg,
+                                      kinds=kinds[:s], lengths=lengths)
+    x = boundary(x)
+    x, dec_new = T.run_layers_prefill(dec_l, x, positions, dec_st, cfg,
+                                      kinds=kinds[s:], lengths=lengths)
+    last = (lengths - 1 if lengths is not None
+            else jnp.full((B,), S - 1, jnp.int32))
+    x = jnp.take_along_axis(x, last[:, None, None], axis=1)
+    x = T.norm_apply_final(params, x, cfg)
+    return T.lm_logits(params, x, cfg), _merge_states(enc_new, dec_new, cfg)
+
+
+def split_prefill(params, tokens, cfg: ModelConfig, states, mode: int = 0, *,
+                  lengths=None):
+    """Whole-prompt split prefill in ONE forward pass: encoder layers,
+    boundary through bottleneck ``mode`` (the single uplink transfer of the
+    prompt's boundary representation), decoder layers — while populating
+    every layer's decode state, instead of looping ``split_decode_step``
+    per prompt token.
+
+    tokens: [B, S] right-padded to a bucket; ``lengths``: optional [B] true
+    prompt lengths. Returns (last-real-position logits, new_states,
+    payload_bytes). The byte figure covers the full padded [B, S] bucket
+    (it must stay a host-side int under jit); callers admitting ragged
+    prompts account per row with ``mode_payload_bytes(cfg, 1, len_b, mode)``
+    instead, as the serving engine does.
+    """
+    def boundary(x):
+        if mode == 0:
+            return x
+        _, bits = bottleneck.mode_widths(cfg.split)[mode - 1]
+        payload = bottleneck.encode(params["bneck_modes"][mode - 1], x, bits)
+        return bottleneck.decode(params["bneck_modes"][mode - 1], *payload,
+                                 bits, dtype=T.model_dtype(cfg))
+
+    logits, new_states = _prefill_through(params, tokens, cfg, states,
+                                          boundary, lengths)
+    B, S = jnp.shape(tokens)[0], jnp.shape(tokens)[-1]
+    pb = bottleneck.mode_payload_bytes(cfg, B, S, mode)
+    return logits, new_states, pb
+
+
+def split_prefill_mixed(params, stacked_bank, tokens, states,
+                        cfg: ModelConfig, mode_idx, *, lengths=None):
+    """Batched multi-request prefill with per-row bottleneck modes: one
+    forward over a right-padded prompt batch where row b's boundary
+    activations cross the wire through its own admission-chosen mode
+    (``mode_idx``: [B] int32, 0 = raw z, m >= 1 = head m-1 gathered from
+    ``stacked_bank``). This is the admission analogue of
+    :func:`split_decode_step_mixed` — quantization happens per boundary
+    position with each row's own bit width, exactly as the per-mode path
+    does. Returns (last-real-position logits, new_states).
+    """
+    return _prefill_through(
+        params, tokens, cfg, states,
+        lambda x: bottleneck.boundary_mixed(stacked_bank, x, mode_idx,
+                                            dtype=T.model_dtype(cfg)),
+        lengths)

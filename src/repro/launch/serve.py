@@ -30,6 +30,7 @@ from repro.core import split as SP
 from repro.core.channel import Channel, ChannelConfig, channel_fleet
 from repro.core.orchestrator import AppRequirement, ModeProfile, Orchestrator
 from repro.data import tokens
+from repro.models import transformer as T
 from repro.serving import ContinuousBatchingEngine, Request, ServingEngine
 from repro.training import checkpoint
 
@@ -66,16 +67,10 @@ def run_continuous(args, cfg, params):
     eng = ContinuousBatchingEngine(params, cfg, n_slots=args.n_slots,
                                    cache_len=args.cache_len,
                                    orchestrator=orch)
-    # warm the compiled prefill/decode paths so decode_tok_per_s measures
-    # steady-state serving (the sync engine likewise excludes its one-time
-    # prefill/trace cost from the decode rate)
-    warm = Request(rid=-1, prompt=np.asarray(batch[0]), max_new_tokens=2,
-                   channel=None)
-    eng.run([warm])
-    eng.finished.clear()
-    eng.tick = 0
-    eng.decode_ticks = eng.mode_mix_ticks = 0
-    eng.queue.submitted = eng.queue.rejected = 0
+    # warm the compiled prefill/decode paths (every prefill batch bucket)
+    # so decode_tok_per_s measures steady-state serving — the sync engine
+    # likewise excludes its one-time prefill/trace cost from the decode rate
+    eng.warm(np.asarray(batch[0]))
 
     t0 = time.time()
     done = eng.run(reqs)
@@ -110,6 +105,13 @@ def run_sync(args, cfg, params):
     t_prefill = time.time() - t0
 
     if args.policy.startswith("static"):
+        if T.full_attention_arch(cfg) and \
+                eng.pos + args.gen > args.cache_len:
+            # same cache-wraparound guard ServingEngine.decode_tokens
+            # applies on the orchestrator path
+            raise ValueError(
+                f"--gen {args.gen} from pos {eng.pos} exceeds --cache-len "
+                f"{args.cache_len} on a full-attention arch")
         mode = int(args.policy[-1])
         out, wire = [], 0
         tok = first

@@ -148,6 +148,84 @@ def full_attention(p, x, positions, *, n_q: int, n_kv: int, hd: int,
     return out.astype(x.dtype) @ p["wo"]["w"]
 
 
+def prefill_attention(p, x, positions, cache, *, n_q: int, n_kv: int,
+                      hd: int, rope_theta: float, window: int = 0,
+                      lengths=None):
+    """Full-sequence prefill that also populates the decode cache.
+
+    Runs causal (optionally sliding-window) attention over the whole prompt
+    in ONE pass and scatters each sequence's K/V rows into its rolling cache
+    slots — the batched replacement for feeding the prompt through
+    ``decode_attention`` token by token.
+
+    x: [B, S, d]; positions: [B, S]; ``lengths``: optional [B] true prompt
+    lengths when the batch is right-padded to a bucket length (pad positions
+    are never written to the cache and, being *after* every real position,
+    are masked out of real queries by causality).
+    Returns (out [B, S, d], populated cache).
+    """
+    B, S = x.shape[:2]
+    clen = cache["k"].shape[1]
+    q, k, v = _project_qkv(p, x, n_q, n_kv, hd)
+    q = apply_rope(q, positions, rope_theta)
+    k = apply_rope(k, positions, rope_theta)
+    if lengths is None:
+        lengths = jnp.full((B,), S, jnp.int32)
+    lengths = jnp.asarray(lengths, jnp.int32)
+
+    quantized = "k_s" in cache
+    if quantized:
+        from repro.core import quant as Q
+        kq, ks = Q.quantize(k, 8)
+        vq, vs = Q.quantize(v, 8)
+        # attend the dequantized values so prefill matches what decode will
+        # read back from the int8 cache
+        k_att = (kq.astype(jnp.float32) * ks).astype(k.dtype)
+        v_att = (vq.astype(jnp.float32) * vs).astype(v.dtype)
+    else:
+        k_att, v_att = k, v
+
+    # decode can only ever see the last ``clen`` positions, so cap the
+    # prefill window to the cache (clen == window for SWA archs by
+    # construction; full-attention archs rely on the engine's capacity rule
+    # to keep S <= clen)
+    w_eff = min(window, clen) if window else window
+    if S >= BLOCKED_ATTN_THRESHOLD and S % _BLOCK_Q == 0 \
+            and S % _BLOCK_K == 0:
+        out = _blocked_attention(q, k_att, v_att, positions, hd, w_eff)
+    else:
+        out = _dense_attention(q, k_att, v_att, positions, hd, w_eff)
+
+    # scatter each row's last min(len, clen) REAL positions into its rolling
+    # cache slot; invalid rows get the out-of-bounds index clen, which the
+    # scatter drops — identical end state to sequential per-token writes
+    keep = min(S, clen)
+    idx = lengths[:, None] - keep + jnp.arange(keep)[None, :]     # [B, keep]
+    valid = idx >= 0
+    idx_c = jnp.clip(idx, 0, S - 1)
+    pos_g = jnp.take_along_axis(positions, idx_c, axis=1)
+    slot = jnp.where(valid, jnp.mod(pos_g, clen), clen)
+    b_ix = jnp.arange(B)[:, None]
+
+    def gather_rows(a):
+        return jnp.take_along_axis(a, idx_c[:, :, None, None], axis=1)
+
+    def scatter(buf, rows):
+        return buf.at[b_ix, slot].set(rows, mode="drop")
+
+    if quantized:
+        new_cache = {
+            "k": scatter(cache["k"], gather_rows(kq)),
+            "k_s": scatter(cache["k_s"], gather_rows(ks)),
+            "v": scatter(cache["v"], gather_rows(vq)),
+            "v_s": scatter(cache["v_s"], gather_rows(vs)),
+        }
+    else:
+        new_cache = {"k": scatter(cache["k"], gather_rows(k)),
+                     "v": scatter(cache["v"], gather_rows(v))}
+    return out.astype(x.dtype) @ p["wo"]["w"], new_cache
+
+
 def init_cache(batch: int, n_kv: int, hd: int, cache_len: int,
                dtype=jnp.bfloat16, kv_bits: int = 0):
     """Per-layer rolling KV cache. ``cache_len`` = window for SWA archs,

@@ -88,6 +88,47 @@ def rglru_full(p, x, *, act: str = "gelu", use_assoc_scan: bool = False):
     return dense_apply(p["out"], y)
 
 
+def rglru_prefill(p, x, state, *, act: str = "gelu", lengths=None):
+    """Full-sequence pass that also returns the decode state the sequence
+    leaves behind — the batched replacement for looping ``rglru_step``.
+
+    x: [B, S, d]; ``state`` is the (usually fresh) carry from
+    ``rglru_state_init``. ``lengths``: optional [B] true lengths for
+    right-padded batches — pad steps are identity updates (a=1, b=0), so the
+    final state is exactly the state after each row's own last real token.
+    Returns (y [B, S, d], new_state).
+    """
+    B, S, _ = x.shape
+    gate = jax.nn.gelu(dense_apply(p["in_gate"], x))
+    u_pre = dense_apply(p["in_rec"], x).astype(jnp.float32)     # [B, S, dr]
+    # continue the carried conv history (zeros for a fresh prompt)
+    hist = jnp.concatenate([state["conv"].astype(jnp.float32), u_pre], axis=1)
+    w = p["conv"].astype(jnp.float32)
+    u_c = sum(hist[:, i:i + S, :] * w[i] for i in range(_CONV_W))
+    a, b = _gates(p, u_c)
+    if lengths is None:
+        lengths = jnp.full((B,), S, jnp.int32)
+    lengths = jnp.asarray(lengths, jnp.int32)
+    valid = (jnp.arange(S)[None, :] < lengths[:, None])[..., None]
+    a = jnp.where(valid, a, 1.0)
+    b = jnp.where(valid, b, 0.0)
+
+    def cell(carry, ab):
+        at, bt = ab
+        hh = at * carry + bt
+        return hh, hh
+
+    h_last, h = chunked_scan(cell, state["h"],
+                             (a.swapaxes(0, 1), b.swapaxes(0, 1)))
+    h = h.swapaxes(0, 1)
+    y = dense_apply(p["out"], h.astype(x.dtype) * gate)
+    # conv state after len steps = last CONV_W-1 rows of
+    # [carried history, u_0 .. u_{len-1}] = hist[len : len + CONV_W - 1]
+    hist_idx = lengths[:, None] + jnp.arange(_CONV_W - 1)[None, :]
+    hist_rows = jnp.take_along_axis(hist, hist_idx[..., None], axis=1)
+    return y, {"h": h_last, "conv": hist_rows.astype(state["conv"].dtype)}
+
+
 def rglru_state_init(batch: int, d_rnn: int, dtype=jnp.float32):
     return {
         "h": jnp.zeros((batch, d_rnn), dtype=jnp.float32),

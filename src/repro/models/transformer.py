@@ -20,17 +20,18 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.models import sharding
 from repro.models.attention import (attn_init, decode_attention, full_attention,
-                                    init_cache)
+                                    init_cache, prefill_attention)
 from repro.models.layers import (dense_apply, dense_init, embed_apply,
                                  embed_init, mlp_apply, mlp_init, norm_apply,
                                  norm_init)
 from repro.models.moe import moe_apply, moe_init
 from repro.models.moe_ep import moe_apply_ep, moe_supports_ep
-from repro.models.rglru import (rglru_full, rglru_init, rglru_state_init,
-                                rglru_step)
-from repro.models.xlstm import (mlstm_full, mlstm_init, mlstm_state_init,
-                                mlstm_step, slstm_full, slstm_init,
-                                slstm_state_init, slstm_step)
+from repro.models.rglru import (rglru_full, rglru_init, rglru_prefill,
+                                rglru_state_init, rglru_step)
+from repro.models.xlstm import (mlstm_full, mlstm_init, mlstm_prefill,
+                                mlstm_state_init, mlstm_step, slstm_full,
+                                slstm_init, slstm_prefill, slstm_state_init,
+                                slstm_step)
 
 _DTYPES = {"bfloat16": jnp.bfloat16, "float32": jnp.float32}
 
@@ -71,6 +72,15 @@ def block_init(key, cfg: ModelConfig, kind: str):
 
 def _attn_window(cfg: ModelConfig) -> int:
     return cfg.sliding_window or cfg.local_window
+
+
+def full_attention_arch(cfg: ModelConfig) -> bool:
+    """True if any layer attends the full context (no window): the KV cache
+    is addressed by absolute position, so serving must keep
+    ``prompt_len + max_new_tokens <= cache_len`` or the rolling write
+    (``pos % cache_len``) silently evicts early prompt context."""
+    return (not _attn_window(cfg)) and any(
+        cfg.block_kind(i) == "attn" for i in range(cfg.n_layers))
 
 
 def block_apply_full(p, x, positions, cfg: ModelConfig, kind: str):
@@ -128,6 +138,41 @@ def block_apply_decode(p, x, state, cur_pos, cfg: ModelConfig, kind: str):
     if "mlp" in p:
         h = norm_apply(p["norm2"], x, cfg.norm)
         if cfg.is_moe:
+            m, _ = moe_apply(p["mlp"], h, k=cfg.experts_per_tok, act=cfg.act)
+        else:
+            m = mlp_apply(p["mlp"], h, cfg.act)
+        x = x + m
+    return x, new_state
+
+
+def block_apply_prefill(p, x, positions, state, cfg: ModelConfig, kind: str,
+                        lengths=None):
+    """Full-sequence block that also populates the decode state (KV cache or
+    recurrent carry) — one forward instead of S sequential decode steps.
+    Returns (x, new_state)."""
+    h = norm_apply(p["norm1"], x, cfg.norm)
+    if kind == "attn":
+        mix, new_state = prefill_attention(
+            p["mix"], h, positions, state, n_q=cfg.n_heads,
+            n_kv=cfg.n_kv_heads, hd=cfg.head_dim, rope_theta=cfg.rope_theta,
+            window=_attn_window(cfg), lengths=lengths)
+    elif kind == "rglru":
+        mix, new_state = rglru_prefill(p["mix"], h, state, act=cfg.act,
+                                       lengths=lengths)
+    elif kind == "mlstm":
+        mix, new_state = mlstm_prefill(p["mix"], h, state, cfg.n_heads,
+                                       lengths=lengths)
+    elif kind == "slstm":
+        mix, new_state = slstm_prefill(p["mix"], h, state, cfg.n_heads,
+                                       lengths=lengths)
+    else:
+        raise ValueError(kind)
+    x = x + mix
+    if "mlp" in p:
+        h = norm_apply(p["norm2"], x, cfg.norm)
+        if cfg.is_moe:
+            # the plain (non-EP) expert path, matching what decode runs —
+            # routing is per token, so results are identical either way
             m, _ = moe_apply(p["mlp"], h, k=cfg.experts_per_tok, act=cfg.act)
         else:
             m = mlp_apply(p["mlp"], h, cfg.act)
@@ -294,6 +339,27 @@ def run_layers_decode(layers, x, states, cur_pos, cfg: ModelConfig,
     return x, tuple(new_states)
 
 
+def run_layers_prefill(layers, x, positions, states, cfg: ModelConfig,
+                       kinds: Optional[Tuple[str, ...]] = None, lengths=None):
+    """Full-sequence pass through a group of layers that also populates the
+    per-layer decode states. Returns (x, new_states)."""
+    if cfg.homogeneous:
+        def body(h, inp):
+            lp, st = inp
+            h, ns = block_apply_prefill(lp, h, positions, st, cfg, "attn",
+                                        lengths)
+            return h, ns
+        x, new_states = jax.lax.scan(body, x, (layers, states))
+        return x, new_states
+
+    kinds = kinds or tuple(cfg.block_kind(i) for i in range(len(layers)))
+    new_states = []
+    for lp, st, kind in zip(layers, states, kinds):
+        x, ns = block_apply_prefill(lp, x, positions, st, cfg, kind, lengths)
+        new_states.append(ns)
+    return x, tuple(new_states)
+
+
 # ---------------------------------------------------------------------------
 # top-level forwards
 # ---------------------------------------------------------------------------
@@ -308,6 +374,33 @@ def forward(params, tokens, cfg: ModelConfig, *, train: bool = False,
     x = norm_apply(params["final_norm"], x, cfg.norm)
     logits = sharding.constrain(lm_logits(params, x, cfg), "logits")
     return logits, aux
+
+
+def prefill(params, tokens, cfg: ModelConfig, states, lengths=None,
+            embeddings: Optional[jnp.ndarray] = None):
+    """Batched full-sequence prefill: run the whole prompt in ONE forward
+    pass while populating ``states`` (KV caches scattered at their rolling
+    slots, recurrent carries advanced to each row's last real token).
+
+    tokens: [B, S] (or [B, K, S] audio), right-padded to a common bucket
+    length; ``lengths``: optional [B] true prompt lengths (None: all S).
+    With vision ``embeddings`` the prefix is concatenated exactly as in
+    :func:`forward`, and ``lengths`` refer to the concatenated sequence.
+    Returns (logits at each row's last real position, shaped like
+    ``decode_step`` output, new_states).
+    """
+    x = embed_tokens(params, tokens, cfg, embeddings)
+    B, S = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    if lengths is not None:
+        lengths = jnp.asarray(lengths, jnp.int32)
+    x, new_states = run_layers_prefill(params["layers"], x, positions,
+                                       states, cfg, lengths=lengths)
+    last = (lengths - 1 if lengths is not None
+            else jnp.full((B,), S - 1, jnp.int32))
+    x = jnp.take_along_axis(x, last[:, None, None], axis=1)       # [B, 1, d]
+    x = norm_apply(params["final_norm"], x, cfg.norm)
+    return lm_logits(params, x, cfg), new_states
 
 
 def decode_step(params, token, states, cur_pos, cfg: ModelConfig,

@@ -100,6 +100,36 @@ def mlstm_full(p, x, n_heads: int):
     return dense_apply(p["down"], h * gate)
 
 
+def _keep_state(valid_b, new, old):
+    """Select per-batch-row between updated and carried state leaves."""
+    return jax.tree.map(
+        lambda n, o: jnp.where(
+            valid_b.reshape((-1,) + (1,) * (n.ndim - 1)), n, o), new, old)
+
+
+def mlstm_prefill(p, x, state, n_heads: int, lengths=None):
+    """Full-sequence mLSTM that also returns the final recurrent state —
+    the batched replacement for looping ``mlstm_step``. ``lengths``:
+    optional [B] true lengths for right-padded batches (pad steps keep the
+    carried state). Returns (y [B, S, d], final_state)."""
+    xl, q, k, v, i_pre, f_pre = _mlstm_qkvif(p, x, n_heads)
+    B, S = x.shape[:2]
+    valid = (jnp.ones((B, S), bool) if lengths is None
+             else jnp.arange(S)[None, :] < jnp.asarray(lengths)[:, None])
+
+    def step(st, t):
+        qt, kt, vt, it, ft, ok = t
+        new, h = _mlstm_cell(st, (qt, kt, vt, it, ft))
+        return _keep_state(ok, new, st), h
+
+    xs = (q.swapaxes(0, 1), k.swapaxes(0, 1), v.swapaxes(0, 1),
+          i_pre.swapaxes(0, 1), f_pre.swapaxes(0, 1), valid.swapaxes(0, 1))
+    final, hs = chunked_scan(step, state, xs, chunk=64)
+    h = hs.swapaxes(0, 1).reshape(B, S, -1).astype(x.dtype)
+    gate = jax.nn.silu(dense_apply(p["up_r"], x))
+    return dense_apply(p["down"], h * gate), final
+
+
 def mlstm_step(p, x, state, n_heads: int):
     """One decode step. x: [B,1,d]."""
     xl, q, k, v, i_pre, f_pre = _mlstm_qkvif(p, x, n_heads)
@@ -174,6 +204,27 @@ def slstm_full(p, x, n_heads: int):
     h = hs.swapaxes(0, 1).astype(x.dtype)          # [B,S,d]
     u = jax.nn.gelu(dense_apply(p["up"], h)) * dense_apply(p["up_gate"], h)
     return dense_apply(p["down"], u)
+
+
+def slstm_prefill(p, x, state, n_heads: int, lengths=None):
+    """Full-sequence sLSTM returning the final recurrent state — the batched
+    replacement for looping ``slstm_step``. ``lengths`` as in
+    ``mlstm_prefill``. Returns (y [B, S, d], final_state)."""
+    B, S, d = x.shape
+    valid = (jnp.ones((B, S), bool) if lengths is None
+             else jnp.arange(S)[None, :] < jnp.asarray(lengths)[:, None])
+
+    def step(st, t):
+        x_t, ok = t
+        new, h = _slstm_cell(p, st, x_t, n_heads)
+        return _keep_state(ok, new, st), h
+
+    final, hs = chunked_scan(step, state,
+                             (x.swapaxes(0, 1).astype(jnp.float32),
+                              valid.swapaxes(0, 1)))
+    h = hs.swapaxes(0, 1).astype(x.dtype)
+    u = jax.nn.gelu(dense_apply(p["up"], h)) * dense_apply(p["up_gate"], h)
+    return dense_apply(p["down"], u), final
 
 
 def slstm_step(p, x, state, n_heads: int):

@@ -4,9 +4,14 @@ The engine keeps a fixed pool of ``n_slots`` decode slots (KV caches /
 recurrent states allocated once, recycled as sequences finish). Every engine
 tick it:
 
-1. admits pending requests from the bounded queue into free slots (each
-   admission prefetches the prompt through a batch-1 prefill and scatters
-   the resulting state into the slot);
+1. admits pending requests from the bounded queue into free slots — all
+   newly admitted prompts prefill in one batched full-sequence forward per
+   prompt-length bucket (pad to power-of-two buckets to bound recompiles),
+   routed through each request's admission-chosen bottleneck mode, and the
+   resulting per-layer states scatter into the slots. Requests whose
+   ``prompt_len + max_new_tokens`` cannot fit a full-attention cache are
+   truncated or rejected (counted) instead of silently wrapping the rolling
+   cache over the prompt;
 2. steps each active request's *own* simulated mmWave channel, lets the
    shared orchestrator pick that request's bottleneck mode from its link
    EMA, and
@@ -24,7 +29,8 @@ next admission.
 from __future__ import annotations
 
 import functools
-from typing import Dict, List, Optional
+import time
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -46,11 +52,35 @@ def _slot_axis(cfg: ModelConfig) -> int:
 
 
 @functools.partial(jax.jit, static_argnums=(3,))
-def _scatter_slot(pool_states, one_states, slot, axis: int):
-    return jax.tree.map(
-        lambda p, o: jax.lax.dynamic_update_slice_in_dim(p, o, slot,
-                                                         axis=axis),
-        pool_states, one_states)
+def _scatter_rows(pool_states, batch_states, slots, axis: int):
+    """Scatter rows 0..len(slots)-1 of a batched prefill's state pytree into
+    the pool slots in ONE dispatch (slots are distinct by construction)."""
+    n = slots.shape[0]
+
+    def put(p, b):
+        rows = jnp.moveaxis(b, axis, 0)[:n]
+        pb = jnp.moveaxis(p, axis, 0).at[slots].set(rows)
+        return jnp.moveaxis(pb, 0, axis)
+
+    return jax.tree.map(put, pool_states, batch_states)
+
+
+def _bucket_len(n: int, lo: int = 8) -> int:
+    """Pad ``n`` up to the next power-of-two bucket (>= ``lo``) so the
+    jitted prefill sees O(log max_prompt) distinct shapes, not one per
+    prompt length."""
+    b = lo
+    while b < n:
+        b <<= 1
+    return b
+
+
+def _group_by_bucket(admits):
+    """Group (req, slot, mode) admissions by prompt-length bucket."""
+    groups: Dict[int, list] = {}
+    for a in admits:
+        groups.setdefault(_bucket_len(a[0].prompt_len), []).append(a)
+    return groups
 
 
 class SlotPool:
@@ -76,12 +106,15 @@ class SlotPool:
         self.positions[slot] = 0
         self._free.append(slot)
 
-    def write(self, slot: int, one_states, pos: int):
-        """Install a freshly prefilled batch-1 state into ``slot`` (full
-        overwrite — whatever a previous occupant left behind is gone)."""
-        self.states = _scatter_slot(self.states, one_states,
-                                    jnp.int32(slot), _slot_axis(self.cfg))
-        self.positions[slot] = pos
+    def write_rows(self, batch_states, slots, positions):
+        """Install rows 0..len(slots)-1 of a freshly prefilled batched state
+        into the given slots in one scatter (full overwrite — whatever a
+        previous occupant left behind is gone)."""
+        self.states = _scatter_rows(self.states, batch_states,
+                                    jnp.asarray(slots, jnp.int32),
+                                    _slot_axis(self.cfg))
+        for s, p in zip(slots, positions):
+            self.positions[s] = p
 
 
 class ContinuousBatchingEngine:
@@ -108,6 +141,16 @@ class ContinuousBatchingEngine:
         self.tick = 0
         self.mode_mix_ticks = 0       # decode ticks with >= 2 distinct modes
         self.decode_ticks = 0
+        self.prefill_calls = 0        # jitted batched-prefill dispatches
+        self.prefill_tokens = 0       # true prompt tokens prefilled
+        self.prefill_padded_tokens = 0  # incl. bucket/batch padding
+        self.requests_over_capacity = 0  # rejected: prompt can't fit cache
+        self.requests_truncated = 0   # max_new_tokens clipped to cache
+        # full-attention archs must fit prompt + generation in the cache
+        # (see T.full_attention_arch); windowed/recurrent archs are
+        # bounded-state by construction
+        self.max_context: Optional[int] = (
+            cache_len if T.full_attention_arch(cfg) else None)
         bank = params.get("bneck_modes") or ()
         self.stacked_bank = (bottleneck.bank_stack(bank, cfg.split)
                              if len(bank) else None)
@@ -122,6 +165,14 @@ class ContinuousBatchingEngine:
             return T.decode_step(params, tok, states, pos, cfg)
         self._mono_step = mono_step
 
+        @jax.jit
+        def mono_prefill(params, toks, lengths):
+            # fresh zero states materialize inside the jit (shapes are
+            # static per bucket) — no per-admission host allocation
+            states = T.init_decode_state(cfg, toks.shape[0], cache_len)
+            return T.prefill(params, toks, cfg, states, lengths=lengths)
+        self._mono_prefill = mono_prefill
+
         if self.stacked_bank is not None:
             @jax.jit
             def mixed_step(params, stacked, tok, states, positions, modes):
@@ -129,13 +180,22 @@ class ContinuousBatchingEngine:
                                                   states, positions, cfg,
                                                   modes)
             self._mixed_step = mixed_step
+
+            @jax.jit
+            def mixed_prefill(params, stacked, toks, lengths, modes):
+                states = T.init_decode_state(cfg, toks.shape[0], cache_len)
+                return SP.split_prefill_mixed(params, stacked, toks, states,
+                                              cfg, modes, lengths=lengths)
+            self._mixed_prefill = mixed_prefill
         else:
             self._mixed_step = None
+            self._mixed_prefill = None
 
     # -- submission -----------------------------------------------------------
     def submit(self, req: Request) -> bool:
         """Queue a request for its arrival tick. Returns False if the
         admission queue rejected it (back-pressure)."""
+        req.t_submit = time.monotonic()
         if req.arrival_tick > self.tick:
             self._pending.append(req)
             return True
@@ -146,47 +206,116 @@ class ContinuousBatchingEngine:
         self._pending = [r for r in self._pending
                          if r.arrival_tick > self.tick]
         for r in sorted(due, key=lambda r: r.arrival_tick):
+            r.t_submit = time.monotonic()
             self.queue.submit(r)
 
     # -- admission ------------------------------------------------------------
-    def _prefill_one(self, prompt: np.ndarray):
-        """Batch-1 prefill via repeated decode steps (exact for attention
-        caches and recurrent states alike). Returns (first_token, states)."""
-        states = T.init_decode_state(self.cfg, 1, self.pool.cache_len)
-        toks = jnp.asarray(prompt)[None]              # [1, S] / [1, K, S]
-        logits = None
-        for t in range(toks.shape[-1]):
-            logits, states = self._mono_step(self.params, toks[..., t:t + 1],
-                                             states, jnp.int32(t))
-        first = np.asarray(jnp.argmax(logits, axis=-1), np.int32)  # [1, ...]
-        return first, states
-
     def _admit(self):
+        """Pop admissible requests into free slots, then prefill every new
+        prompt in one batched full-sequence forward per length bucket.
+
+        Loops because a budget-1 session completes inside its own prefill
+        (the prefill argmax is its whole generation) and frees its slot for
+        the next queued request within the same tick."""
+        while self.pool.n_free and len(self.queue):
+            admits = self._collect_admits()
+            if not admits:            # everything popped was over capacity
+                break
+            for blen, group in sorted(_group_by_bucket(admits).items()):
+                self._prefill_group(blen, group)
+
+    def _collect_admits(self) -> List[tuple]:
+        admits: List[tuple] = []      # (req, slot, mode, budget, capacity)
         while self.pool.n_free and len(self.queue):
             req = self.queue.pop()
+            budget = req.max_new_tokens
+            if self.max_context is not None:
+                if req.prompt_len > self.max_context:
+                    # the prompt alone cannot fit: admitting would wrap the
+                    # rolling cache over its own context — reject instead
+                    self.requests_over_capacity += 1
+                    continue
+                # the first generated token is the prefill argmax (no cache
+                # write); decode writes land at prompt_len..prompt_len+b-2,
+                # so b <= cache_len - prompt_len + 1 never wraps
+                fit = self.max_context - req.prompt_len + 1
+                if budget > fit:
+                    budget = fit          # session-level clip; the caller's
+                    self.requests_truncated += 1   # Request is not mutated
             slot = self.pool.acquire()
-            sess = Session(request=req, slot=slot, admitted_tick=self.tick)
             if req.channel is None:
                 req.channel = self.default_channel
-            mode = 0
+            mode, cap = 0, None
             if self.orch is not None:
                 self.orch.register(req.rid, req.requirement)
                 if req.channel is not None:
-                    self.orch.observe_capacity(req.channel.step(),
-                                               rid=req.rid)
-                if self._mixed_step is not None:
+                    cap = req.channel.step()
+                    self.orch.observe_capacity(cap, rid=req.rid)
+                if self._mixed_prefill is not None:
                     mode = self.orch.choose_mode(rid=req.rid)
-            first, one_states = self._prefill_one(req.prompt)
-            self.pool.write(slot, one_states, req.prompt_len)
-            self.cur_tokens[slot] = first[0]
+            admits.append((req, slot, mode, budget, cap))
+        return admits
+
+    def _prefill_group(self, blen: int, group: List[tuple]):
+        """ONE jitted full-sequence prefill for every request in a bucket:
+        prompts right-padded to ``blen``, batch padded to a power of two,
+        each row's boundary routed through its admission-chosen mode."""
+        n = len(group)
+        bp = _bucket_len(n, lo=1)          # pow2 batch: bounded compile set
+        audio = (self.cfg.frontend == "audio" and self.cfg.n_codebooks > 1)
+        shape = (bp, self.cfg.n_codebooks, blen) if audio else (bp, blen)
+        toks = np.zeros(shape, np.int32)
+        lens = np.ones(bp, np.int32)       # pad rows: harmless length-1 rows
+        modes = np.zeros(bp, np.int32)
+        for i, (req, _, mode, _, _) in enumerate(group):
+            toks[i, ..., :req.prompt_len] = req.prompt
+            lens[i] = req.prompt_len
+            modes[i] = mode
+        if self._mixed_prefill is not None:
+            logits, new_states = self._mixed_prefill(
+                self.params, self.stacked_bank, jnp.asarray(toks),
+                jnp.asarray(lens), jnp.asarray(modes))
+        else:
+            logits, new_states = self._mono_prefill(
+                self.params, jnp.asarray(toks), jnp.asarray(lens))
+        self.prefill_calls += 1
+        self.prefill_tokens += int(lens[:n].sum())
+        self.prefill_padded_tokens += bp * blen
+        first = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        now = time.monotonic()
+        # ONE scatter moves every admitted row into its pool slot
+        self.pool.write_rows(new_states, [a[1] for a in group],
+                             [a[0].prompt_len for a in group])
+        for i, (req, slot, mode, budget, cap) in enumerate(group):
+            tok = first[i]
+            self.cur_tokens[slot] = tok
+            sess = Session(request=req, slot=slot, admitted_tick=self.tick,
+                           gen_budget=budget)
             sess.pos = req.prompt_len
+            # the prefill's argmax IS the first generated token — deliver it
+            sess.tokens.append(int(tok.reshape(-1)[0]) if tok.ndim
+                               else int(tok))
+            sess.ttft_s = now - req.t_submit if req.t_submit else 0.0
             # the prompt's boundary activations cross the uplink once, in
-            # the admission-chosen mode
+            # the admission-chosen mode (and the prefill really ran them
+            # through that mode's bottleneck head), with the transfer
+            # simulated against the link capacity observed at admission
             pb = bottleneck.mode_payload_bytes(self.cfg, 1, req.prompt_len,
                                                mode)
             sess.prefill_wire_bytes = pb
             sess.wire_bytes += pb
-            self.active[slot] = sess
+            if self.orch is not None:
+                link = self.orch.register(req.rid)
+                sess.transfer_s += tx_seconds(
+                    pb, cap if cap is not None else link.capacity_ema)
+            if sess.done:                # budget == 1: already complete
+                sess.finished_tick = self.tick
+                if self.orch is not None:
+                    self.orch.release(req.rid)
+                self.pool.release(slot)
+                self.finished.append(sess)
+            else:
+                self.active[slot] = sess
 
     # -- decode ---------------------------------------------------------------
     def _choose_modes(self) -> np.ndarray:
@@ -261,6 +390,32 @@ class ContinuousBatchingEngine:
         self.tick += 1
         return True
 
+    def warm(self, prompt: np.ndarray, gen: int = 2):
+        """Trace every compiled path a measured run can hit — decode plus
+        each power-of-two prefill batch bucket up to the slot pool — then
+        zero the counters. ``prompt`` should have the measured run's prompt
+        length so the same length bucket compiles."""
+        k = 1
+        while True:
+            n = min(k, self.pool.n_slots)
+            self.run([Request(rid=-1 - i, prompt=np.asarray(prompt),
+                              max_new_tokens=gen) for i in range(n)])
+            if k >= self.pool.n_slots:
+                break
+            k <<= 1
+        self.reset_counters()
+
+    def reset_counters(self):
+        """Zero every aggregate stat (after a warm-up run) while keeping the
+        compiled paths, pool state, and orchestrator calibration."""
+        self.finished.clear()
+        self.tick = 0
+        self.decode_ticks = self.mode_mix_ticks = 0
+        self.prefill_calls = self.prefill_tokens = 0
+        self.prefill_padded_tokens = 0
+        self.requests_over_capacity = self.requests_truncated = 0
+        self.queue.submitted = self.queue.rejected = 0
+
     def run(self, requests: Optional[List[Request]] = None,
             max_ticks: int = 100_000) -> List[Session]:
         """Drive the engine until every submitted request completes (or the
@@ -275,7 +430,12 @@ class ContinuousBatchingEngine:
     # -- aggregate stats ------------------------------------------------------
     def stats(self) -> dict:
         toks = sum(len(s.tokens) for s in self.finished)
+        # the first token of every session came from its prefill, not a
+        # decode tick — decode-side rates divide by decode-tick tokens only
+        dec_toks = sum(max(len(s.tokens) - 1, 0) for s in self.finished)
         wire = sum(s.wire_bytes for s in self.finished)
+        prefill_wire = sum(s.prefill_wire_bytes for s in self.finished)
+        decode_wire = wire - prefill_wire
         mix: Dict[int, int] = {}
         for s in self.finished:
             for m, c in s.mode_counts.items():
@@ -283,10 +443,23 @@ class ContinuousBatchingEngine:
         return {
             "requests_finished": len(self.finished),
             "requests_rejected": self.queue.rejected,
-            "decode_tokens": toks,
+            "requests_over_capacity": self.requests_over_capacity,
+            "requests_truncated": self.requests_truncated,
+            "generated_tokens": toks,
+            "decode_tokens": dec_toks,
             "wire_bytes": wire,
-            "wire_bytes_per_token": wire / max(toks, 1),
+            # prefill bytes scale with prompt length, decode bytes with
+            # generated tokens — folding them into one per-token figure
+            # skewed mode comparisons, so they are reported separately
+            "prefill_wire_bytes": prefill_wire,
+            "decode_wire_bytes": decode_wire,
+            "decode_wire_bytes_per_token": decode_wire / max(dec_toks, 1),
             "mode_counts": mix,
             "decode_ticks": self.decode_ticks,
             "mixed_mode_ticks": self.mode_mix_ticks,
+            "prefill_calls": self.prefill_calls,
+            "prefill_tokens": self.prefill_tokens,
+            "prefill_padded_tokens": self.prefill_padded_tokens,
+            "mean_ttft_s": (float(np.mean([s.ttft_s for s in self.finished]))
+                            if self.finished else 0.0),
         }

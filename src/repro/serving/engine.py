@@ -9,11 +9,12 @@ modes in one jitted step — lives in ``repro.serving.batcher``
 (``ContinuousBatchingEngine``), with the request lifecycle records in
 ``repro.serving.session``.
 
-``prefill`` feeds the prompt through ``decode_step`` token by token —
-exact for every architecture family (attention caches and recurrent states
-update identically to decode), which keeps one code path for all 10 archs.
-``decode_tokens`` then decodes with the orchestrator-selected bottleneck
-mode, accounting the bytes that cross the UE->edge boundary per token.
+``prefill`` runs the whole prompt in one batched full-sequence forward
+(``T.prefill`` — populates attention caches and recurrent states for every
+architecture family); a mid-stream continuation (``pos > 0``) falls back to
+the exact per-token decode loop. ``decode_tokens`` then decodes with the
+orchestrator-selected bottleneck mode, accounting the bytes that cross the
+UE->edge boundary per token.
 """
 from __future__ import annotations
 
@@ -69,6 +70,7 @@ class ServingEngine:
         self.states = T.init_decode_state(cfg, batch, cache_len)
         self.pos = 0
         self._steps: Dict[Optional[int], Callable] = {}
+        self._prefill_fn: Optional[Callable] = None
         self.stats = GenStats()
 
     def _step(self, mode: Optional[int]):
@@ -83,11 +85,31 @@ class ServingEngine:
         self.stats = GenStats()
 
     def prefill(self, tokens: jnp.ndarray) -> jnp.ndarray:
-        """tokens: [B, S] (or [B, K, S] audio). Returns last-position logits."""
-        step = self._step(None)
+        """tokens: [B, S] (or [B, K, S] audio). Returns last-position logits.
+
+        From a fresh state this is ONE batched full-sequence forward; a
+        mid-stream continuation (``pos > 0``) keeps the exact per-token
+        decode path."""
         S = tokens.shape[-1]
+        if T.full_attention_arch(self.cfg) and self.pos + S > self.cache_len:
+            # the rolling write (pos % cache_len) would silently evict early
+            # prompt context on a full-attention arch — refuse instead (the
+            # continuous engine's admission rule does the counted version)
+            raise ValueError(
+                f"prompt of {S} tokens at pos {self.pos} exceeds the "
+                f"cache ({self.cache_len}) on a full-attention arch")
+        if self.pos == 0:
+            if self._prefill_fn is None:
+                cfg = self.cfg
+                self._prefill_fn = jax.jit(
+                    lambda p, t, s: T.prefill(p, t, cfg, s))
+            logits, self.states = self._prefill_fn(
+                self.params, jnp.asarray(tokens), self.states)
+            self.pos = S
+            return logits
+        step = self._step(None)
         logits = None
-        for t in range(S):      # tiny prompts in CPU examples
+        for t in range(S):      # tiny continuations in CPU examples
             tok = tokens[..., t:t + 1]
             logits, self.states = step(self.params, tok, self.states,
                                        jnp.int32(self.pos))
@@ -98,6 +120,13 @@ class ServingEngine:
                       greedy: bool = True, capacity_bps_fn=None) -> np.ndarray:
         """Generate ``n_steps`` tokens; per-token the orchestrator picks the
         transmit mode from the live channel capacity."""
+        if T.full_attention_arch(self.cfg) and \
+                self.pos + n_steps > self.cache_len:
+            # every decode step writes its KV row at mod(pos, cache_len) —
+            # generating past the cache would wrap over the prompt context
+            raise ValueError(
+                f"{n_steps} decode steps from pos {self.pos} exceed the "
+                f"cache ({self.cache_len}) on a full-attention arch")
         tok = first_token
         out: List[np.ndarray] = []
         for _ in range(n_steps):

@@ -27,6 +27,7 @@ class Request:
     channel: Optional[Channel] = None  # this user's uplink (None: engine default)
     requirement: Optional[AppRequirement] = None
     arrival_tick: int = 0              # engine tick at which the UE submits
+    t_submit: float = 0.0              # wall-clock stamp (set by the engine)
 
     @property
     def prompt_len(self) -> int:
@@ -39,17 +40,22 @@ class Session:
     request: Request
     slot: int
     admitted_tick: int = 0
+    gen_budget: int = 0                # effective max_new_tokens (0: the
+                                       # request's own; engines may clip it
+                                       # to cache capacity at admission)
     pos: int = 0                       # absolute position of the next token
     tokens: List[int] = field(default_factory=list)
     wire_bytes: int = 0                # uplink boundary bytes, this request
     prefill_wire_bytes: int = 0
     transfer_s: float = 0.0            # accumulated simulated link latency
+    ttft_s: float = 0.0                # wall clock submit -> first token
     mode_counts: Dict[int, int] = field(default_factory=dict)
     finished_tick: int = -1
 
     @property
     def done(self) -> bool:
-        return len(self.tokens) >= self.request.max_new_tokens
+        budget = self.gen_budget or self.request.max_new_tokens
+        return len(self.tokens) >= budget
 
     def account(self, mode: int, payload_bytes: int, tx_s: float):
         self.wire_bytes += payload_bytes
@@ -64,6 +70,7 @@ class Session:
             "wire_bytes": self.wire_bytes,
             "prefill_wire_bytes": self.prefill_wire_bytes,
             "transfer_s": round(self.transfer_s, 6),
+            "ttft_s": round(self.ttft_s, 6),
             "mode_counts": dict(self.mode_counts),
             "admitted_tick": self.admitted_tick,
             "finished_tick": self.finished_tick,

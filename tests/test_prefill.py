@@ -1,0 +1,162 @@
+"""Batched full-sequence prefill vs the token-at-a-time decode loop.
+
+The prefill subsystem (``T.prefill`` / ``SP.split_prefill`` /
+``SP.split_prefill_mixed``) must reproduce, in ONE forward pass, exactly the
+decode state and last-position logits that feeding the prompt through
+``decode_step`` token by token produces — for attention KV caches (incl.
+rolling local-attention windows) and recurrent carries alike, and for
+right-padded prompt buckets with per-row true lengths.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.configs.base import SplitConfig
+from repro.core import bottleneck as BN
+from repro.core import split as SP
+from repro.models import transformer as T
+
+ATOL = 3e-4
+
+# attention (GQA + qkv bias), Griffin (rglru + rolling local-attn window),
+# and xLSTM (mlstm + slstm) cover every decode-state family
+ARCHS = ["qwen2.5-3b", "recurrentgemma-2b", "xlstm-125m"]
+
+
+def _loop_prefill(params, cfg, prompt_row, cache_len):
+    """Reference batch-1 admission: one decode step per prompt token."""
+    states = T.init_decode_state(cfg, 1, cache_len)
+    logits = None
+    for t in range(prompt_row.shape[-1]):
+        logits, states = T.decode_step(params, jnp.asarray(
+            prompt_row[None, ..., t:t + 1]), states, jnp.int32(t), cfg)
+    return np.asarray(logits), states
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_matches_tokenwise_loop(arch):
+    """Padded batched prefill == per-row decode-step loop: last logits AND
+    the decode state (verified through a follow-up decode step)."""
+    cfg = get_reduced(arch)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    B, S, cache_len = 2, 8, 32
+    lens = np.array([6, 3], np.int32)         # right-padded, ragged lengths
+    toks = np.zeros((B, S), np.int32)
+    for b in range(B):
+        toks[b, :lens[b]] = rng.integers(1, cfg.vocab_size, lens[b])
+
+    base = [_loop_prefill(params, cfg, toks[b, :lens[b]], cache_len)
+            for b in range(B)]
+    pf_logits, pf_states = T.prefill(
+        params, jnp.asarray(toks), cfg,
+        T.init_decode_state(cfg, B, cache_len), lengths=jnp.asarray(lens))
+    for b in range(B):
+        np.testing.assert_allclose(np.asarray(pf_logits)[b], base[b][0][0],
+                                   atol=ATOL, rtol=ATOL)
+
+    # the states must agree too: one more decode step from each
+    nxt = jnp.asarray(rng.integers(1, cfg.vocab_size, (B, 1)).astype(np.int32))
+    lg_pf, _ = T.decode_step(params, nxt, pf_states, jnp.asarray(lens), cfg)
+    for b in range(B):
+        lg_b, _ = T.decode_step(params, nxt[b:b + 1], base[b][1],
+                                jnp.int32(int(lens[b])), cfg)
+        np.testing.assert_allclose(np.asarray(lg_pf)[b], np.asarray(lg_b)[0],
+                                   atol=ATOL, rtol=ATOL)
+
+
+def _het_cfg():
+    """qwen reduced with a heterogeneous mode bank: widths 32/16/24/8 and
+    bit widths 8/4/1/0 — exercises the padded-bank gather, the ternary
+    bits=1 wire (NaN before the qmax floor fix) and the unquantized
+    bits=0 wire."""
+    cfg = get_reduced("qwen2.5-3b")
+    return dataclasses.replace(cfg, split=SplitConfig(
+        split_at=1, d_bottleneck=32, quant_bits=8,
+        extra_modes=((16, 4), (24, 1), (8, 0))))
+
+
+@pytest.fixture(scope="module")
+def het_setup():
+    cfg = _het_cfg()
+    params = SP.init_split_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def test_split_prefill_every_mode_matches_loop(het_setup):
+    """split_prefill(mode=m) == looping split_decode_step(mode=m) over the
+    prompt, for every calibrated mode."""
+    cfg, params = het_setup
+    rng = np.random.default_rng(1)
+    B, S, cache_len = 2, 8, 32
+    lens = np.array([7, 4], np.int32)
+    toks = np.zeros((B, S), np.int32)
+    for b in range(B):
+        toks[b, :lens[b]] = rng.integers(1, cfg.vocab_size, lens[b])
+
+    for m in range(cfg.split.n_modes):
+        base = []
+        for b in range(B):
+            st = T.init_decode_state(cfg, 1, cache_len)
+            lg = None
+            for t in range(int(lens[b])):
+                lg, st, _ = SP.split_decode_step(
+                    params, jnp.asarray(toks[b:b + 1, t:t + 1]), st,
+                    jnp.int32(t), cfg, mode=m)
+            base.append(np.asarray(lg))
+        lg_p, _, _ = SP.split_prefill(
+            params, jnp.asarray(toks), cfg,
+            T.init_decode_state(cfg, B, cache_len), mode=m,
+            lengths=jnp.asarray(lens))
+        for b in range(B):
+            np.testing.assert_allclose(np.asarray(lg_p)[b], base[b][0],
+                                       atol=ATOL, rtol=ATOL)
+
+
+def test_split_prefill_mixed_uniform_matches_per_mode(het_setup):
+    """split_prefill_mixed with uniform mode_idx=m == split_prefill(mode=m)
+    for every calibrated mode (the admission analogue of the decode-step
+    parity pin)."""
+    cfg, params = het_setup
+    stacked = BN.bank_stack(params["bneck_modes"], cfg.split)
+    rng = np.random.default_rng(2)
+    B, S, cache_len = 2, 8, 32
+    lens = jnp.asarray([5, 8], jnp.int32)
+    toks = jnp.asarray(rng.integers(1, cfg.vocab_size,
+                                    size=(B, S)).astype(np.int32))
+    for m in range(cfg.split.n_modes):
+        ref, _, _ = SP.split_prefill(
+            params, toks, cfg, T.init_decode_state(cfg, B, cache_len),
+            mode=m, lengths=lens)
+        mix, _ = SP.split_prefill_mixed(
+            params, stacked, toks, T.init_decode_state(cfg, B, cache_len),
+            cfg, jnp.full((B,), m, jnp.int32), lengths=lens)
+        np.testing.assert_allclose(np.asarray(mix), np.asarray(ref),
+                                   atol=ATOL, rtol=ATOL)
+
+
+def test_mixed_decode_step_every_calibrated_mode(het_setup):
+    """split_decode_step(mode=m) == split_decode_step_mixed with uniform
+    mode_idx=m for EVERY calibrated mode of the heterogeneous bank — pins
+    the exact-equivalence claim of the padded-bank gather
+    (bottleneck.bank_stack / boundary_mixed) across widths and bit
+    widths 8/4/1/0."""
+    cfg, params = het_setup
+    stacked = BN.bank_stack(params["bneck_modes"], cfg.split)
+    B = 3
+    states = T.init_decode_state(cfg, B, 32)
+    tok = jnp.ones((B, 1), jnp.int32)
+    pos = jnp.full((B,), 5, jnp.int32)
+    for m in range(cfg.split.n_modes):
+        ref, _, _ = SP.split_decode_step(params, tok, states, jnp.int32(5),
+                                         cfg, mode=m)
+        mix, _ = SP.split_decode_step_mixed(params, stacked, tok, states,
+                                            pos, cfg,
+                                            jnp.full((B,), m, jnp.int32))
+        assert np.isfinite(np.asarray(mix)).all()
+        np.testing.assert_allclose(np.asarray(ref), np.asarray(mix),
+                                   atol=1e-5, rtol=1e-5)

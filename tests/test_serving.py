@@ -97,7 +97,8 @@ def test_continuous_batching_mixed_modes_and_accounting(setup):
         dec = sum(BN.mode_payload_bytes(cfg, 1, 1, m) * c
                   for m, c in s.mode_counts.items())
         assert s.wire_bytes == s.prefill_wire_bytes + dec
-        assert sum(s.mode_counts.values()) == len(s.tokens)
+        # the first token came from the prefill, not a decode tick
+        assert sum(s.mode_counts.values()) == len(s.tokens) - 1
         # and the mode payload table itself is the packed wire format
         assert BN.mode_payload_bytes(cfg, 1, 1, 1) == \
             quant.payload_bytes((1, 1, w[0]), w[1])
@@ -122,3 +123,117 @@ def test_payload_bytes_packed_rows():
     assert quant.payload_bytes((3, 5), 8) == 3 * (5 + 2)
     # raw bf16
     assert quant.payload_bytes((3, 5), 0) == 30
+
+
+def test_quantize_bits1_finite_and_consistent():
+    """qmax(1) must floor at 1 (ternary code), matching boundary_mixed's
+    floor — a zero qmax made the scale infinite and the dequant NaN."""
+    assert quant.qmax(1) == 1
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(4, 7)),
+                    jnp.float32)
+    q, s = quant.quantize(x, 1)
+    assert np.isfinite(np.asarray(s)).all()
+    d = quant.dequantize(q, s, 1)
+    assert np.isfinite(np.asarray(d)).all()
+    assert set(np.unique(np.asarray(q))) <= {-1, 0, 1}
+    # the mixed-path wire (boundary_mixed) uses the same qm for bits=1:
+    # max(1 << (max(bits,1)-1) - 1, 1) == quant.qmax(1)
+    assert max((1 << (max(1, 1) - 1)) - 1, 1) == quant.qmax(1)
+
+
+# -- batched full-sequence admission ------------------------------------------
+
+def test_admission_is_one_batched_prefill_with_greedy_parity(setup):
+    """Admitting a 64-token prompt must issue ONE jitted prefill call (not
+    64 sequential batch-1 decode steps), with greedy decode matching the
+    per-token-prefill baseline in mode 0."""
+    cfg, params = setup
+    rng = np.random.default_rng(0)
+    prompt = rng.integers(1, cfg.vocab_size, 64).astype(np.int32)
+    eng = ContinuousBatchingEngine(params, cfg, n_slots=2, cache_len=128)
+    done = eng.run([Request(rid=0, prompt=prompt, max_new_tokens=8)])
+    st = eng.stats()
+    assert st["prefill_calls"] == 1
+    assert st["prefill_tokens"] == 64
+
+    # loop baseline: token-at-a-time admission + greedy decode (mode 0 is
+    # the raw boundary, so the monolithic path is the reference)
+    states = T.init_decode_state(cfg, 1, 128)
+    lg = None
+    for t in range(64):
+        lg, states = T.decode_step(params, jnp.asarray(prompt[None, t:t + 1]),
+                                   states, jnp.int32(t), cfg)
+    tok = jnp.argmax(lg, -1).astype(jnp.int32)
+    ref, pos = [int(tok[0, 0])], 64      # the prefill argmax IS token 1
+    for _ in range(7):
+        lg, states = T.decode_step(params, tok, states, jnp.int32(pos), cfg)
+        pos += 1
+        tok = jnp.argmax(lg, -1).astype(jnp.int32)
+        ref.append(int(tok[0, 0]))
+    assert done[0].tokens == ref
+    assert done[0].ttft_s > 0
+
+
+def test_multi_request_admission_single_call(setup):
+    """All requests admitted in one tick and one length bucket prefill in
+    ONE batched call."""
+    cfg, params = setup
+    rng = np.random.default_rng(1)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(1, cfg.vocab_size,
+                                        5 + i).astype(np.int32),
+                    max_new_tokens=4)
+            for i in range(3)]
+    eng = ContinuousBatchingEngine(params, cfg, n_slots=4, cache_len=64)
+    done = eng.run(reqs)
+    assert len(done) == 3
+    assert eng.stats()["prefill_calls"] == 1      # one bucket, one dispatch
+
+
+def test_over_capacity_rejected_and_truncated(setup):
+    """Full-attention archs must never wrap the rolling cache over the
+    prompt: an unfittable prompt is rejected (counted), and a generation
+    budget that would overflow the cache is truncated."""
+    cfg, params = setup
+    rng = np.random.default_rng(2)
+    too_long = Request(rid=0, prompt=rng.integers(
+        1, cfg.vocab_size, 20).astype(np.int32), max_new_tokens=4)
+    overflow = Request(rid=1, prompt=rng.integers(
+        1, cfg.vocab_size, 8).astype(np.int32), max_new_tokens=20)
+    exact_fit = Request(rid=2, prompt=rng.integers(
+        1, cfg.vocab_size, 16).astype(np.int32), max_new_tokens=3)
+    eng = ContinuousBatchingEngine(params, cfg, n_slots=2, cache_len=16)
+    done = eng.run([too_long, overflow, exact_fit])
+    st = eng.stats()
+    assert st["requests_over_capacity"] == 1
+    assert st["requests_truncated"] == 2
+    by_rid = {s.request.rid: s for s in done}
+    assert set(by_rid) == {1, 2}
+    # truncated to exactly what fits: the prefill argmax costs no cache
+    # write, so cache_len - prompt_len + 1 tokens are deliverable
+    assert len(by_rid[1].tokens) == 16 - 8 + 1
+    # budget-1 decode ticks ran; the last write was at position pos-1 ==
+    # cache_len-1, so nothing ever wrapped the cache
+    assert by_rid[1].pos == 16
+    # a prompt that exactly fills the cache is servable for one token
+    # (the prefill argmax), not rejected
+    assert len(by_rid[2].tokens) == 1
+    # the original request is NOT mutated by the session-level clip
+    assert by_rid[1].request.max_new_tokens == 20
+
+
+def test_wire_byte_split_prefill_vs_decode(setup):
+    """stats() must report prompt-proportional prefill bytes separately
+    from per-generated-token decode bytes."""
+    cfg, params = setup
+    eng, done = _run_engine(cfg, params, 8)
+    st = eng.stats()
+    assert st["prefill_wire_bytes"] == sum(s.prefill_wire_bytes
+                                           for s in done)
+    assert st["decode_wire_bytes"] == sum(s.wire_bytes - s.prefill_wire_bytes
+                                          for s in done)
+    dec_toks = sum(len(s.tokens) - 1 for s in done)   # first token: prefill
+    assert st["decode_wire_bytes_per_token"] == \
+        st["decode_wire_bytes"] / dec_toks
+    assert st["generated_tokens"] == sum(len(s.tokens) for s in done)
+    assert "wire_bytes_per_token" not in st      # the skewed figure is gone
