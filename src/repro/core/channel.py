@@ -12,8 +12,14 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass
+from typing import Optional, Sequence
 
 import numpy as np
+
+#: Default request/response round-trip added to every boundary transfer.
+#: ``Orchestrator.choose_modes`` and ``tx_seconds`` must use the same value
+#: or the vectorized and scalar feasibility paths would disagree.
+RTT_SECONDS = 0.004
 
 
 @dataclass
@@ -31,16 +37,25 @@ class ChannelConfig:
 
 class Channel:
     """Stateful simulated link; ``step()`` advances one tick and returns the
-    current capacity in bytes/second."""
+    current capacity in bytes/second.
 
-    def __init__(self, cfg: ChannelConfig = ChannelConfig()):
-        self.cfg = cfg
-        self.rng = np.random.default_rng(cfg.seed)
+    ``cfg`` defaults to a *fresh* ``ChannelConfig`` per instance — a shared
+    default-argument instance would alias the (mutable) config across every
+    default-constructed channel.
+    """
+
+    def __init__(self, cfg: Optional[ChannelConfig] = None):
+        self.cfg = cfg if cfg is not None else ChannelConfig()
+        self.rng = np.random.default_rng(self.cfg.seed)
         self._x = 0.0              # AR(1) state (zero-mean)
         self.blocked = False
         self.t = 0.0
 
     def step(self) -> float:
+        """Advance the live channel state by ONE tick (AR(1) fade + blockage
+        Markov chain) and return the new capacity in bytes/second. Every call
+        mutates ``self`` — replaying a tick is not possible; reconstruct the
+        channel from the same config/seed instead."""
         c = self.cfg
         self._x = c.corr * self._x + np.sqrt(1 - c.corr ** 2) * \
             self.rng.normal(0.0, c.std_mbps)
@@ -57,17 +72,59 @@ class Channel:
         return mbps * 1e6 / 8.0    # bytes/s
 
     def trace(self, n_ticks: int) -> np.ndarray:
+        """Capacities (bytes/s) for the next ``n_ticks`` ticks.
+
+        This ADVANCES the live channel state (it calls :meth:`step`
+        ``n_ticks`` times): after ``trace(n)`` the channel sits ``n`` ticks
+        later, and interleaving ``trace`` with ``step`` continues the same
+        realization. For a side-effect-free preview, build a second
+        ``Channel`` from the same config (same seed) and trace that."""
         return np.array([self.step() for _ in range(n_ticks)])
 
 
-def channel_fleet(n: int, cfg: ChannelConfig = None, *, seed: int = 0,
-                  mean_spread: float = 0.5) -> list:
+class TraceChannel(Channel):
+    """A link that replays a prescribed capacity trace (bytes/s per tick).
+
+    Deterministic by construction — both sides of an A/B policy comparison
+    (e.g. adaptive vs admission-frozen mode selection in
+    ``benchmarks/bench_serving.py``) see the *identical* capacity sequence.
+    After the trace is exhausted, ``step`` holds the last value, or cycles
+    from the start when ``cycle=True``.
+    """
+
+    def __init__(self, capacities_bps: Sequence[float], *,
+                 cycle: bool = False, cfg: Optional[ChannelConfig] = None):
+        super().__init__(cfg)
+        self.capacities = np.asarray(capacities_bps, np.float64)
+        if self.capacities.size == 0:
+            raise ValueError("TraceChannel needs a non-empty trace")
+        self.cycle = cycle
+        self._i = 0
+
+    def step(self) -> float:
+        """Advance the live replay cursor one tick and return that tick's
+        scripted capacity in bytes/second (mutates ``self`` like
+        ``Channel.step``)."""
+        n = self.capacities.size
+        i = self._i % n if self.cycle else min(self._i, n - 1)
+        self._i += 1
+        self.t += self.cfg.tick_seconds
+        return float(self.capacities[i])
+
+
+def channel_fleet(n: int, cfg: Optional[ChannelConfig] = None, *,
+                  seed: int = 0, mean_spread: float = 0.5) -> list:
     """``n`` independent per-user links for continuous-batching serving.
 
     Each user gets their own AR(1)/blockage process (distinct sub-seed) and a
     mean uplink drawn log-uniformly within ``[1-mean_spread, 1+mean_spread]``
     of the base config — cell-edge users coexist with beam-center users, so
     a mixed decode batch genuinely wants mixed bottleneck modes.
+
+    Every fleet member owns a *distinct* ``ChannelConfig``
+    (``dataclasses.replace`` of the base), and the caller's ``cfg`` is never
+    mutated — mutating one member's config cannot leak into another member
+    or into later fleets built from the same base.
     """
     base = cfg if cfg is not None else ChannelConfig()
     rng = np.random.default_rng(seed)
@@ -87,6 +144,6 @@ def channel_fleet(n: int, cfg: ChannelConfig = None, *, seed: int = 0,
 
 
 def tx_seconds(payload_bytes: int, capacity_bps: float,
-               rtt_seconds: float = 0.004) -> float:
+               rtt_seconds: float = RTT_SECONDS) -> float:
     """Transfer latency for one boundary payload."""
     return payload_bytes / max(capacity_bps, 1.0) + rtt_seconds

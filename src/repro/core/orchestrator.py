@@ -28,9 +28,11 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass, field
-from typing import Dict, Hashable, List, Optional
+from typing import Dict, Hashable, List, Optional, Sequence
 
-from repro.core.channel import tx_seconds
+import numpy as np
+
+from repro.core.channel import RTT_SECONDS, tx_seconds
 
 
 @dataclass
@@ -157,3 +159,90 @@ class Orchestrator:
             s.switches += 1
             s.mode = chosen.mode
         return s.mode
+
+    # -- vectorized per-tick decision (continuous-batching hot path) ----------
+    def choose_modes(self, rids: Sequence[Hashable],
+                     capacities: Optional[Sequence[Optional[float]]] = None,
+                     hold: Optional[Sequence[bool]] = None,
+                     commit: bool = True) -> np.ndarray:
+        """Per-link mode selection for a whole decode batch in one shot.
+
+        Numerically identical to calling ``observe_capacity(c, rid=r)`` +
+        ``choose_mode(rid=r)`` per link, but the O(N x M) feasibility scan
+        (every link against every mode profile) is one numpy broadcast
+        instead of N Python loops — this is what the serving-side
+        ``ModeController`` calls every engine tick.
+
+        ``capacities``: optional per-link observation (``None`` entries skip
+        the EMA update for that link). ``hold``: optional boolean mask —
+        links with ``hold[i]`` keep their current mode this tick (their EMA
+        still updates); the controller uses it for dwell-time suppression.
+        Returns the chosen mode per link as ``int32 [N]``; with ``commit``
+        (the default) each link's ``LinkState`` (mode, switch count) updates
+        exactly as the scalar path does. ``commit=False`` leaves the link
+        states untouched so a caller that may still override the choice
+        (the controller's deadline escalation) can commit the FINAL mode
+        once via :meth:`force_mode` — one counted switch per observable
+        transition.
+        """
+        links = [self._link(r) for r in rids]
+        if capacities is not None:
+            for r, c in zip(rids, capacities):
+                if c is not None:
+                    self.observe_capacity(c, rid=r)
+        caps = np.array([link.capacity_ema for link in links], np.float64)
+        ticks = np.array([link.ticks for link in links], np.int64)
+        cur = np.array([link.mode for link in links], np.int64)
+        budgets = np.array([self._req(r).latency_budget_s for r in rids])
+        min_accs = np.array([self._req(r).min_acc for r in rids])
+
+        # rank modes by relevance (shared EMA loss, ascending) once per tick
+        ranked = sorted(self.profiles, key=lambda p: self.loss_ema[p.mode])
+        pay_r = np.array([p.payload_bytes for p in ranked], np.float64)
+        acc_r = np.array([p.expected_acc for p in ranked])
+        mode_r = np.array([p.mode for p in ranked], np.int64)
+
+        # feasibility: [N, M] transfer latencies against per-link budgets
+        tx = pay_r[None, :] / np.maximum(caps[:, None], 1.0) + RTT_SECONDS
+        feasible = tx <= budgets[:, None]
+        feasible[ticks == 0, :] = True          # cold start: optimistic
+        ok = feasible & ((min_accs[:, None] <= 0.0)
+                         | (acc_r[None, :] >= min_accs[:, None]))
+        any_ok = ok.any(axis=1)
+        chosen = mode_r[np.argmax(ok, axis=1)]  # most relevant feasible
+        fallback = min(self.profiles, key=lambda p: p.payload_bytes).mode
+        chosen = np.where(any_ok, chosen, fallback)
+
+        # hysteresis: an upgrade (larger payload than current) must stay
+        # feasible at capacity * hysteresis, else keep the current mode
+        pos = {p.mode: i for i, p in enumerate(self.profiles)}
+        pay_m = np.array([p.payload_bytes for p in self.profiles], np.float64)
+        pay_cho = pay_m[[pos[int(m)] for m in chosen]]
+        pay_cur = pay_m[[pos[int(m)] for m in cur]]
+        upgrade = (ticks > 0) & (chosen != cur) & (pay_cho > pay_cur)
+        tx_h = pay_cho / np.maximum(caps * self.hysteresis, 1.0) + RTT_SECONDS
+        chosen = np.where(upgrade & (tx_h > budgets), cur, chosen)
+
+        if hold is not None:
+            chosen = np.where(np.asarray(hold, bool), cur, chosen)
+        if commit:
+            for link, m in zip(links, chosen):
+                if int(m) != link.mode:
+                    link.switches += 1
+                    link.mode = int(m)
+        return chosen.astype(np.int32)
+
+    def force_mode(self, rid: Optional[Hashable], mode: int) -> int:
+        """Set a link's mode directly (the controller's commit point after
+        an uncommitted ``choose_modes`` pass, including deadline
+        escalations). Counts a switch when it changes."""
+        s = self._link(rid)
+        if mode != s.mode:
+            s.switches += 1
+            s.mode = mode
+        return s.mode
+
+    def requirement_for(self, rid: Optional[Hashable] = None) -> AppRequirement:
+        """The effective ``AppRequirement`` for a link: the one registered
+        for ``rid``, else the orchestrator-wide default."""
+        return self._req(rid)

@@ -31,7 +31,8 @@ from repro.core.channel import Channel, ChannelConfig, channel_fleet
 from repro.core.orchestrator import AppRequirement, ModeProfile, Orchestrator
 from repro.data import tokens
 from repro.models import transformer as T
-from repro.serving import ContinuousBatchingEngine, Request, ServingEngine
+from repro.serving import (ContinuousBatchingEngine, ControllerConfig,
+                           ModeController, Request, ServingEngine)
 from repro.training import checkpoint
 
 
@@ -64,9 +65,15 @@ def run_continuous(args, cfg, params):
                     max_new_tokens=args.gen, channel=chans[i],
                     arrival_tick=i * args.arrival_every)
             for i in range(args.requests)]
+    kw = {}
+    if args.mode_policy == "adaptive":
+        kw["controller"] = ModeController(
+            orch, ControllerConfig(dwell_ticks=args.dwell_ticks))
+    else:
+        kw["orchestrator"] = orch
+        kw["freeze_modes"] = args.mode_policy == "frozen"
     eng = ContinuousBatchingEngine(params, cfg, n_slots=args.n_slots,
-                                   cache_len=args.cache_len,
-                                   orchestrator=orch)
+                                   cache_len=args.cache_len, **kw)
     # warm the compiled prefill/decode paths (every prefill batch bucket)
     # so decode_tok_per_s measures steady-state serving — the sync engine
     # likewise excludes its one-time prefill/trace cost from the decode rate
@@ -162,6 +169,13 @@ def main(argv=None):
                     help="continuous engine: decode slot pool size")
     ap.add_argument("--arrival-every", type=int, default=2,
                     help="continuous engine: ticks between request arrivals")
+    ap.add_argument("--mode-policy", default="pertick",
+                    choices=["pertick", "adaptive", "frozen"],
+                    help="continuous engine: per-tick orchestrator loop "
+                         "(legacy), adaptive ModeController (dwell + "
+                         "deadline escalation), or admission-frozen modes")
+    ap.add_argument("--dwell-ticks", type=int, default=2,
+                    help="adaptive policy: min ticks between mode switches")
     ap.add_argument("--mean-mbps", type=float, default=40.0,
                     help="continuous engine: fleet mean uplink")
     ap.add_argument("--ckpt", default=None)

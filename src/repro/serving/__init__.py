@@ -6,12 +6,18 @@
 ``batcher.ContinuousBatchingEngine`` — slot-pooled continuous batching with
                                 per-request channels and per-slot bottleneck
                                 modes inside one jitted decode step.
+``controller.ModeController`` — per-slot, per-tick in-flight mode
+                                re-selection (EWMA + dwell + deadline
+                                escalation) for the continuous engine.
 ``session``                   — request/queue/session lifecycle records.
 
-See docs/serving.md for the request lifecycle and slot-pool design.
+See docs/serving.md for the request lifecycle and slot-pool design, and
+docs/modes.md for the mode bank and the stats field reference.
 """
 from repro.serving.batcher import (ContinuousBatchingEngine,  # noqa: F401
                                    SlotPool)
+from repro.serving.controller import (ControllerConfig,  # noqa: F401
+                                      ModeController, SlotControl)
 from repro.serving.engine import GenStats, ServingEngine  # noqa: F401
 from repro.serving.session import (Request, RequestQueue,  # noqa: F401
                                    Session)

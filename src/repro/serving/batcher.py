@@ -12,9 +12,13 @@ tick it:
    ``prompt_len + max_new_tokens`` cannot fit a full-attention cache are
    truncated or rejected (counted) instead of silently wrapping the rolling
    cache over the prompt;
-2. steps each active request's *own* simulated mmWave channel, lets the
-   shared orchestrator pick that request's bottleneck mode from its link
-   EMA, and
+2. steps each active request's *own* simulated mmWave channel and picks
+   that request's bottleneck mode for THIS tick under the configured mode
+   policy — ``adaptive`` (a ``ModeController``: vectorized re-selection from
+   the link EWMA with dwell-time damping and deadline-aware escalation),
+   ``per-tick`` (the orchestrator's scalar loop, the legacy default), or
+   ``frozen`` (the admission-chosen mode for the session's whole life, the
+   baseline the paper's dynamic claim is measured against) — and
 3. runs ONE jitted mixed-mode decode step for the whole pool — per-slot
    positions (sequences are at different depths) and per-slot mode indices
    (the bottleneck head is a gather over the stacked mode bank, not a
@@ -42,6 +46,7 @@ from repro.core import split as SP
 from repro.core.channel import Channel, tx_seconds
 from repro.core.orchestrator import Orchestrator
 from repro.models import transformer as T
+from repro.serving.controller import ModeController
 from repro.serving.session import Request, RequestQueue, Session
 
 
@@ -128,11 +133,23 @@ class ContinuousBatchingEngine:
     def __init__(self, params, cfg: ModelConfig, *, n_slots: int = 8,
                  cache_len: int = 128,
                  orchestrator: Optional[Orchestrator] = None,
+                 controller: Optional[ModeController] = None,
+                 freeze_modes: bool = False,
                  default_channel: Optional[Channel] = None,
                  max_pending: int = 64):
+        if controller is not None:
+            if freeze_modes:
+                raise ValueError("controller and freeze_modes are mutually "
+                                 "exclusive mode policies")
+            if orchestrator is not None and orchestrator is not controller.orch:
+                raise ValueError("pass either the controller (which owns its "
+                                 "orchestrator) or an orchestrator, not both")
+            orchestrator = controller.orch
         self.params = params
         self.cfg = cfg
         self.orch = orchestrator
+        self.controller = controller
+        self.freeze_modes = freeze_modes
         self.default_channel = default_channel
         self.pool = SlotPool(cfg, n_slots, cache_len)
         self.queue = RequestQueue(max_pending)
@@ -154,6 +171,9 @@ class ContinuousBatchingEngine:
         bank = params.get("bneck_modes") or ()
         self.stacked_bank = (bottleneck.bank_stack(bank, cfg.split)
                              if len(bank) else None)
+        if controller is not None and self.stacked_bank is None:
+            raise ValueError("adaptive mode control needs a bottleneck mode "
+                             "bank in params (init_split_params)")
         self._tok_shape = ((n_slots, cfg.n_codebooks, 1)
                            if cfg.frontend == "audio" and cfg.n_codebooks > 1
                            else (n_slots, 1))
@@ -247,12 +267,18 @@ class ContinuousBatchingEngine:
                 req.channel = self.default_channel
             mode, cap = 0, None
             if self.orch is not None:
-                self.orch.register(req.rid, req.requirement)
-                if req.channel is not None:
-                    cap = req.channel.step()
-                    self.orch.observe_capacity(cap, rid=req.rid)
-                if self._mixed_prefill is not None:
-                    mode = self.orch.choose_mode(rid=req.rid)
+                if self.controller is not None:
+                    if req.channel is not None:
+                        cap = req.channel.step()
+                    mode = self.controller.admit(req.rid, req.requirement,
+                                                 cap, self.tick)
+                else:
+                    self.orch.register(req.rid, req.requirement)
+                    if req.channel is not None:
+                        cap = req.channel.step()
+                        self.orch.observe_capacity(cap, rid=req.rid)
+                    if self._mixed_prefill is not None:
+                        mode = self.orch.choose_mode(rid=req.rid)
             admits.append((req, slot, mode, budget, cap))
         return admits
 
@@ -290,7 +316,8 @@ class ContinuousBatchingEngine:
             tok = first[i]
             self.cur_tokens[slot] = tok
             sess = Session(request=req, slot=slot, admitted_tick=self.tick,
-                           gen_budget=budget)
+                           gen_budget=budget, admission_mode=mode,
+                           mode_trace=[(self.tick, mode)])
             sess.pos = req.prompt_len
             # the prefill's argmax IS the first generated token — deliver it
             sess.tokens.append(int(tok.reshape(-1)[0]) if tok.ndim
@@ -310,37 +337,85 @@ class ContinuousBatchingEngine:
                     pb, cap if cap is not None else link.capacity_ema)
             if sess.done:                # budget == 1: already complete
                 sess.finished_tick = self.tick
-                if self.orch is not None:
-                    self.orch.release(req.rid)
+                self._release_links(sess)
                 self.pool.release(slot)
                 self.finished.append(sess)
             else:
                 self.active[slot] = sess
 
+    def _release_links(self, sess: Session):
+        """Drop a retiring session's orchestrator/controller state, folding
+        the controller's escalation count into the session record (its
+        switch trace is already on the session)."""
+        if self.controller is not None:
+            ctl = self.controller.finish(sess.request.rid)
+            if ctl is not None:
+                sess.escalations = ctl.escalations
+        elif self.orch is not None:
+            self.orch.release(sess.request.rid)
+
     # -- decode ---------------------------------------------------------------
     def _choose_modes(self) -> np.ndarray:
+        """Per-slot mode selection for THIS decode tick.
+
+        Every live session's own channel advances exactly one tick
+        regardless of policy (identical observation streams make
+        adaptive-vs-frozen comparisons apples-to-apples); the policy only
+        decides what to do with the observation:
+
+        * ``controller`` set — adaptive: one vectorized
+          ``ModeController.step_modes`` call re-selects the whole pool;
+        * ``freeze_modes`` — the admission-chosen mode for the session's
+          whole life (the EMA still tracks, for transfer accounting);
+        * otherwise — the orchestrator's scalar per-request loop (legacy).
+
+        Also accounts per-token wire bytes/transfer under the time-varying
+        mode, records mode-switch traces, and counts a deadline miss for
+        every decode token whose simulated transfer exceeded the session's
+        latency budget.
+        """
         modes = np.zeros(self.pool.n_slots, np.int32)
-        for slot, sess in self.active.items():
+        items = sorted(self.active.items())        # deterministic slot order
+        caps = [sess.request.channel.step()
+                if self.orch is not None and sess.request.channel is not None
+                else None
+                for _, sess in items]
+        chosen = None
+        if self.controller is not None and items:
+            chosen = self.controller.step_modes(
+                [sess.request.rid for _, sess in items], caps, self.tick)
+        for i, (slot, sess) in enumerate(items):
             mode = 0
             if self.orch is not None:
                 rid = sess.request.rid
-                cap = None
-                if sess.request.channel is not None:
-                    cap = sess.request.channel.step()
-                    self.orch.observe_capacity(cap, rid=rid)
-                if self._mixed_step is not None:
-                    mode = self.orch.choose_mode(rid=rid)
-                # else: no bottleneck bank in params — the decode path can
-                # only transmit the raw boundary, so account mode 0 rather
-                # than charging for compression that never runs
+                cap = caps[i]
+                if chosen is not None:
+                    mode = int(chosen[i])
+                else:
+                    if cap is not None:
+                        self.orch.observe_capacity(cap, rid=rid)
+                    if self._mixed_step is not None:
+                        mode = (sess.admission_mode if self.freeze_modes
+                                else self.orch.choose_mode(rid=rid))
+                    # else: no bottleneck bank in params — the decode path
+                    # can only transmit the raw boundary, so account mode 0
+                    # rather than charging for compression that never runs
                 pb = bottleneck.mode_payload_bytes(self.cfg, 1, 1, mode)
                 link = self.orch.register(rid)
-                sess.account(mode, pb,
-                             tx_seconds(pb, cap if cap is not None
-                                        else link.capacity_ema))
+                tx = tx_seconds(pb, cap if cap is not None
+                                else link.capacity_ema)
+                sess.account(mode, pb, tx)
+                # deadline misses are only meaningful against an observed
+                # link: with no channel the capacity EMA is a phantom 0.0
+                # and every token would count as a miss
+                if link.ticks > 0 and \
+                        tx > self.orch.requirement_for(rid).latency_budget_s:
+                    sess.deadline_misses += 1
             else:
                 pb = bottleneck.mode_payload_bytes(self.cfg, 1, 1, 0)
                 sess.account(0, pb, 0.0)
+            if sess.mode_trace and sess.mode_trace[-1][1] != mode:
+                sess.mode_trace.append((self.tick, mode))
             modes[slot] = mode
         return modes
 
@@ -382,8 +457,7 @@ class ContinuousBatchingEngine:
             sess.pos += 1
             if sess.done:
                 sess.finished_tick = self.tick
-                if self.orch is not None:
-                    self.orch.release(sess.request.rid)
+                self._release_links(sess)
                 del self.active[slot]
                 self.pool.release(slot)
                 self.finished.append(sess)
@@ -440,7 +514,17 @@ class ContinuousBatchingEngine:
         for s in self.finished:
             for m, c in s.mode_counts.items():
                 mix[m] = mix.get(m, 0) + c
+        switches = sum(max(len(s.mode_trace) - 1, 0) for s in self.finished)
+        misses = sum(s.deadline_misses for s in self.finished)
+        policy = ("adaptive" if self.controller is not None
+                  else "frozen" if self.freeze_modes
+                  else "per-tick" if self.orch is not None else "static")
         return {
+            "mode_policy": policy,
+            "mode_switches": switches,
+            "mode_escalations": sum(s.escalations for s in self.finished),
+            "deadline_misses": misses,
+            "deadline_miss_rate": misses / max(dec_toks, 1),
             "requests_finished": len(self.finished),
             "requests_rejected": self.queue.rejected,
             "requests_over_capacity": self.requests_over_capacity,

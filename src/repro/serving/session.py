@@ -11,7 +11,7 @@ what it cost on the wire.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -50,6 +50,14 @@ class Session:
     transfer_s: float = 0.0            # accumulated simulated link latency
     ttft_s: float = 0.0                # wall clock submit -> first token
     mode_counts: Dict[int, int] = field(default_factory=dict)
+    admission_mode: int = 0            # mode chosen when the prompt crossed
+    #: (engine_tick, mode) whenever this session's transmit mode changed;
+    #: the admission entry is always present, so a session that never
+    #: switched has exactly one entry
+    mode_trace: List[Tuple[int, int]] = field(default_factory=list)
+    deadline_misses: int = 0           # decode tokens whose simulated
+    #                                    transfer blew the latency budget
+    escalations: int = 0               # controller deadline escalations
     finished_tick: int = -1
 
     @property
@@ -72,6 +80,11 @@ class Session:
             "transfer_s": round(self.transfer_s, 6),
             "ttft_s": round(self.ttft_s, 6),
             "mode_counts": dict(self.mode_counts),
+            "admission_mode": self.admission_mode,
+            "mode_trace": list(self.mode_trace),
+            "mode_switches": max(len(self.mode_trace) - 1, 0),
+            "deadline_misses": self.deadline_misses,
+            "escalations": self.escalations,
             "admitted_tick": self.admitted_tick,
             "finished_tick": self.finished_tick,
         }

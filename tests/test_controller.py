@@ -1,0 +1,309 @@
+"""In-flight dynamic mode switching: controller policy (dwell, escalation,
+vectorized selection parity) and the correctness pin that a mid-stream mode
+switch leaves decode state identical to a fixed-mode run of the same
+per-token mode sequence — for every decode-state family."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.core import bottleneck as BN
+from repro.core import split as SP
+from repro.core.channel import (Channel, ChannelConfig, TraceChannel,
+                                channel_fleet, tx_seconds)
+from repro.core.orchestrator import (AppRequirement, ModeProfile,
+                                     Orchestrator)
+from repro.models import transformer as T
+from repro.serving import (ContinuousBatchingEngine, ControllerConfig,
+                           ModeController, Request)
+
+ATOL = 3e-4
+
+# attention (GQA KV cache), Griffin (RG-LRU + rolling local-attn window),
+# and xLSTM (mLSTM + sLSTM) cover every decode-state family
+ARCHS = ["qwen2.5-3b", "recurrentgemma-2b", "xlstm-125m"]
+
+PROFILES = [ModeProfile(0, 100_000, 1.0, 0.9),
+            ModeProfile(1, 10_000, 1.2, 0.8),
+            ModeProfile(2, 1_000, 1.5, 0.7)]
+
+
+def make_orch(**kw):
+    kw.setdefault("requirement", AppRequirement(latency_budget_s=0.05))
+    return Orchestrator([ModeProfile(p.mode, p.payload_bytes,
+                                     p.expected_loss, p.expected_acc)
+                         for p in PROFILES], **kw)
+
+
+# -- vectorized selection ------------------------------------------------------
+
+def test_choose_modes_matches_scalar_path():
+    """``choose_modes(rids, caps)`` must be decision-for-decision identical
+    to the scalar observe_capacity + choose_mode loop, including EMA
+    bootstrap, cold start, min_acc filtering, hysteresis, and per-link
+    switch counting."""
+    scalar, vector = make_orch(), make_orch()
+    rids = ["a", "b", "c"]
+    strict = AppRequirement(latency_budget_s=0.05, min_acc=0.85)
+    for o in (scalar, vector):
+        o.register("a")
+        o.register("b", strict)
+        o.register("c")
+    rng = np.random.default_rng(0)
+    for t in range(40):
+        # spread over the feasibility boundaries of all three profiles,
+        # with occasional missing observations
+        caps = [None if rng.random() < 0.15
+                else float(10 ** rng.uniform(3.5, 7.5)) for _ in rids]
+        want = []
+        for r, c in zip(rids, caps):
+            if c is not None:
+                scalar.observe_capacity(c, rid=r)
+            want.append(scalar.choose_mode(rid=r))
+        got = vector.choose_modes(rids, caps)
+        assert got.tolist() == want, f"tick {t}: {got.tolist()} != {want}"
+    for r in rids:
+        ls, lv = scalar.register(r), vector.register(r)
+        assert lv.mode == ls.mode
+        assert lv.switches == ls.switches
+        assert lv.ticks == ls.ticks
+        np.testing.assert_allclose(lv.capacity_ema, ls.capacity_ema)
+
+
+def test_choose_modes_hold_keeps_current_mode():
+    orch = make_orch(ema=0.0, hysteresis=1.0)
+    orch.register("u")
+    assert orch.choose_modes(["u"], [1e9]).tolist() == [0]
+    # capacity collapses, but the hold mask (the controller's dwell) wins
+    assert orch.choose_modes(["u"], [1e3], hold=[True]).tolist() == [0]
+    assert orch.register("u").switches == 0
+    # EMA tracked through the held tick: released, it switches immediately
+    assert orch.choose_modes(["u"], [1e3]).tolist() == [2]
+
+
+# -- controller policy ---------------------------------------------------------
+
+def test_controller_dwell_prevents_flapping():
+    """A capacity trace oscillating across mode 0's feasibility boundary
+    flaps the bare per-tick policy every tick; the controller's dwell time
+    bounds switches to at most one per dwell window."""
+    boundary = PROFILES[0].payload_bytes / (0.05 - 0.004)
+    n, dwell = 40, 8
+    osc = [boundary * (1.05 if t % 2 else 0.95) for t in range(n)]
+
+    bare = make_orch(ema=0.0, hysteresis=1.0)
+    bare.register("u")
+    for c in osc:
+        bare.observe_capacity(c, rid="u")
+        bare.choose_mode(rid="u")
+    assert bare.register("u").switches > n // 2      # the failure mode
+
+    orch = make_orch(ema=0.0, hysteresis=1.0)
+    ctl = ModeController(orch, ControllerConfig(dwell_ticks=dwell,
+                                                escalate_util=10.0))
+    ctl.admit("u", None, osc[0], tick=0)
+    for t, c in enumerate(osc[1:], start=1):
+        ctl.step_modes(["u"], [c], t)
+    assert ctl.control("u").switches <= n // dwell + 1
+    assert ctl.control("u").switches < bare.register("u").switches
+
+
+def test_deadline_escalation_overrides_dwell():
+    """When predicted transfer time blows the latency budget, the session
+    must drop to the cheapest mode IMMEDIATELY — dwell exists to damp
+    flapping, not to ride a collapsing link into deadline misses."""
+    orch = make_orch(ema=0.0, hysteresis=1.0)
+    ctl = ModeController(orch, ControllerConfig(dwell_ticks=1000,
+                                                util_ema=0.0))
+    assert ctl.admit("u", None, 1e9, tick=0) == 0     # good link: raw mode
+    modes = ctl.step_modes(["u"], [1e3], 1)           # link collapses
+    assert modes.tolist() == [2]                      # cheapest, now
+    c = ctl.control("u")
+    assert c.escalations == 1
+    assert c.trace == [(0, 0, 0), (1, 0, 2)]
+    # and the orchestrator's link state agrees (hysteresis next tick uses it)
+    assert orch.register("u").mode == 2
+
+
+def test_no_escalation_on_cold_start_links():
+    """A session with no channel (no capacity ever observed) must stay on
+    the optimistic cold-start mode — the phantom 0.0 capacity EMA must not
+    feed the deadline tracker and force-drop it to the cheapest mode."""
+    orch = make_orch()
+    ctl = ModeController(orch, ControllerConfig(util_ema=0.0))
+    assert ctl.admit("u", None, None, tick=0) == 0
+    for t in range(1, 5):
+        assert ctl.step_modes(["u"], [None], t).tolist() == [0]
+    c = ctl.control("u")
+    assert c.escalations == 0 and c.switches == 0
+    # first real observation brings the tracker online without phantom
+    # history: a healthy link keeps the mode
+    assert ctl.step_modes(["u"], [1e9], 5).tolist() == [0]
+    assert ctl.control("u").escalations == 0
+
+
+def test_controller_lifecycle_detaches():
+    orch = make_orch()
+    ctl = ModeController(orch)
+    ctl.admit("u", None, 1e8, tick=0)
+    assert ctl.n_attached == 1
+    rec = ctl.finish("u")
+    assert rec is not None and rec.mode == 0
+    assert ctl.n_attached == 0
+    assert "u" not in orch._links
+
+
+# -- switch-vs-fixed decode-state equivalence ---------------------------------
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_midstream_switch_matches_fixed_mode_sequence(arch):
+    """Decoding with modes switching mid-stream (the mixed step, as the
+    engine runs it when the controller re-selects) must produce the same
+    logits at every step AND the same final decode state as running the
+    identical per-token mode sequence through the per-mode scalar step —
+    i.e. switching is stateless: nothing about a past mode lingers in the
+    caches/carries beyond the tokens it produced."""
+    cfg = get_reduced(arch)
+    params = SP.init_split_params(jax.random.PRNGKey(0), cfg)
+    stacked = BN.bank_stack(params["bneck_modes"], cfg.split)
+    B, cache_len = 2, 32
+    mode_seq = [0, 0, 1, 1, 0, 1]        # two upswitches, one downswitch
+    rng = np.random.default_rng(0)
+    toks = rng.integers(1, cfg.vocab_size,
+                        size=(len(mode_seq), B, 1)).astype(np.int32)
+
+    st_mix = T.init_decode_state(cfg, B, cache_len)
+    st_ref = T.init_decode_state(cfg, B, cache_len)
+    for t, m in enumerate(mode_seq):
+        tok = jnp.asarray(toks[t])
+        lg_mix, st_mix = SP.split_decode_step_mixed(
+            params, stacked, tok, st_mix, jnp.full((B,), t, jnp.int32),
+            cfg, jnp.full((B,), m, jnp.int32))
+        lg_ref, st_ref, _ = SP.split_decode_step(
+            params, tok, st_ref, jnp.int32(t), cfg, mode=m)
+        np.testing.assert_allclose(
+            np.asarray(lg_mix), np.asarray(lg_ref), atol=ATOL, rtol=ATOL,
+            err_msg=f"{arch}: logits diverge at step {t} (mode {m})")
+    for a, b in zip(jax.tree.leaves(st_mix), jax.tree.leaves(st_ref)):
+        np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32),
+            atol=ATOL, rtol=ATOL,
+            err_msg=f"{arch}: decode state diverges after switches")
+
+
+# -- engine-level adaptive vs frozen ------------------------------------------
+
+def test_engine_adaptive_beats_frozen_on_fade():
+    """On identical fading channels, the adaptive controller must spend no
+    more wire bytes/token than admission-frozen modes, at an
+    equal-or-better deadline-miss rate, and record the mid-stream switch."""
+    cfg = get_reduced("qwen2.5-3b")
+    params = SP.init_split_params(jax.random.PRNGKey(0), cfg)
+    pay = {m: BN.mode_payload_bytes(cfg, 1, 1, m)
+           for m in range(cfg.split.n_modes)}
+    budget = 0.006
+    hi = 4.0 * max(pay.values()) / (budget - 0.004)
+    lo = 1.3 * min(pay.values()) / (budget - 0.004)
+    fade = np.concatenate([np.full(4, hi), np.linspace(hi, lo, 6),
+                           np.full(24, lo)])
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(1, cfg.vocab_size, 4).astype(np.int32)
+               for _ in range(2)]
+
+    def run(adaptive: bool):
+        orch = Orchestrator(
+            [ModeProfile(m, pay[m], float(m)) for m in pay],
+            AppRequirement(latency_budget_s=budget), ema=0.5, hysteresis=0.9)
+        kw = ({"controller": ModeController(orch,
+                                            ControllerConfig(dwell_ticks=2))}
+              if adaptive else {"orchestrator": orch, "freeze_modes": True})
+        eng = ContinuousBatchingEngine(params, cfg, n_slots=2,
+                                       cache_len=64, **kw)
+        done = eng.run([Request(rid=i, prompt=prompts[i], max_new_tokens=16,
+                                channel=TraceChannel(fade))
+                        for i in range(2)])
+        assert len(done) == 2
+        return eng.stats(), done
+
+    ast, adone = run(adaptive=True)
+    fst, fdone = run(adaptive=False)
+    assert ast["mode_policy"] == "adaptive"
+    assert fst["mode_policy"] == "frozen"
+    # frozen sessions admitted on the good link lock in the raw mode
+    assert all(s.admission_mode == 0 and len(s.mode_trace) == 1
+               for s in fdone)
+    assert fst["mode_switches"] == 0
+    # the controller switched mid-stream and the trace recorded it
+    assert ast["mode_switches"] >= 1
+    assert any(len(s.mode_trace) > 1 for s in adone)
+    assert ast["decode_wire_bytes_per_token"] \
+        < fst["decode_wire_bytes_per_token"]
+    assert ast["deadline_miss_rate"] <= fst["deadline_miss_rate"]
+    # per-session ledgers reconcile under time-varying modes
+    for s in adone:
+        dec = sum(BN.mode_payload_bytes(cfg, 1, 1, m) * c
+                  for m, c in s.mode_counts.items())
+        assert s.wire_bytes == s.prefill_wire_bytes + dec
+
+
+def test_engine_rejects_conflicting_policy_config():
+    cfg = get_reduced("qwen2.5-3b")
+    params = SP.init_split_params(jax.random.PRNGKey(0), cfg)
+    orch = make_orch()
+    ctl = ModeController(orch)
+    with pytest.raises(ValueError):
+        ContinuousBatchingEngine(params, cfg, controller=ctl,
+                                 freeze_modes=True)
+    with pytest.raises(ValueError):
+        ContinuousBatchingEngine(params, cfg, controller=ctl,
+                                 orchestrator=make_orch())
+
+
+# -- channel hygiene -----------------------------------------------------------
+
+def test_channel_default_config_not_shared():
+    a, b = Channel(), Channel()
+    assert a.cfg is not b.cfg
+    a.cfg.mean_mbps = 1.0
+    assert b.cfg.mean_mbps != 1.0
+
+
+def test_channel_fleet_configs_isolated():
+    base = ChannelConfig(mean_mbps=100.0)
+    fleet = channel_fleet(3, base, seed=5)
+    assert len({id(c.cfg) for c in fleet}) == 3
+    assert all(c.cfg is not base for c in fleet)
+    fleet[0].cfg.mean_mbps = -1.0
+    assert base.mean_mbps == 100.0               # caller's cfg untouched
+    assert fleet[1].cfg.mean_mbps > 0            # members isolated
+    # distinct sub-seeds: members realize different traces
+    t0, t1 = fleet[1].trace(8), fleet[2].trace(8)
+    assert not np.allclose(t0, t1)
+
+
+def test_channel_trace_advances_live_state():
+    """``trace`` is documented to ADVANCE the live channel (it drives
+    ``step``): interleaving trace and step continues one realization."""
+    cfg = ChannelConfig(seed=3)
+    a, b = Channel(cfg), Channel(cfg)
+    first = a.trace(5)
+    np.testing.assert_allclose(first, [b.step() for _ in range(5)])
+    assert a.t == pytest.approx(5 * cfg.tick_seconds)
+    # continuing after trace == continuing after the equivalent steps
+    np.testing.assert_allclose(a.step(), b.step())
+
+
+def test_trace_channel_replays_and_holds():
+    tc = TraceChannel([10.0, 20.0, 30.0])
+    assert [tc.step() for _ in range(5)] == [10.0, 20.0, 30.0, 30.0, 30.0]
+    cyc = TraceChannel([1.0, 2.0], cycle=True)
+    assert [cyc.step() for _ in range(4)] == [1.0, 2.0, 1.0, 2.0]
+    with pytest.raises(ValueError):
+        TraceChannel([])
+
+
+def test_tx_seconds_matches_vectorized_rtt():
+    """The scalar and vectorized feasibility paths must share one RTT."""
+    from repro.core.channel import RTT_SECONDS
+    assert tx_seconds(0, 1e9) == pytest.approx(RTT_SECONDS)

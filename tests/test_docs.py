@@ -1,0 +1,53 @@
+"""The docs link-checker (tools/check_docs.py, run by the CI docs job) must
+pass on the repo's own markdown and actually catch rot."""
+import importlib.util
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[1]
+
+spec = importlib.util.spec_from_file_location(
+    "check_docs", REPO / "tools" / "check_docs.py")
+check_docs = importlib.util.module_from_spec(spec)
+spec.loader.exec_module(check_docs)
+
+
+def test_repo_markdown_has_no_broken_links():
+    errors = check_docs.check_repo(REPO)
+    assert errors == [], "\n".join(errors)
+
+
+def test_github_slugs():
+    s = check_docs.github_slug
+    assert s("Split serving") == "split-serving"
+    assert s("`payload_bytes` rounding semantics") == \
+        "payload_bytes-rounding-semantics"
+    assert s("Encoder → bottleneck → decoder!") == "encoder--bottleneck--decoder"
+
+
+def test_checker_catches_broken_links_and_anchors(tmp_path):
+    (tmp_path / "a.md").write_text(
+        "# Title\n\n## Real Heading\n\n[ok](b.md) [ok2](#real-heading)\n"
+        "[bad file](missing.md) [bad anchor](b.md#nope)\n"
+        "```\n[not a link in code](also_missing.md)\n```\n"
+        "~~~\n[nor in tilde fences](tilde_missing.md)\n~~~\n")
+    (tmp_path / "b.md").write_text("# B\n")
+    # a mid-line ``` in prose must NOT pair with a later real fence and
+    # swallow the broken link between them
+    (tmp_path / "c.md").write_text(
+        "# C\n\nwrap examples in ``` fences\n\n[swallowed?](gone.md)\n\n"
+        "```\ncode\n```\n")
+    # indented fences (valid inside list items) are still code, not links
+    (tmp_path / "ind.md").write_text(
+        "# I\n\n- item:\n  ```\n  [in code](ind_missing.md)\n  ```\n")
+    errors = check_docs.check_repo(tmp_path)
+    assert len(errors) == 3
+    assert any("missing.md" in e for e in errors)
+    assert any("#nope" in e for e in errors)
+    assert any("gone.md" in e for e in errors)
+    assert not any("ind_missing" in e for e in errors)
+
+
+def test_duplicate_headings_get_numbered_anchors(tmp_path):
+    (tmp_path / "d.md").write_text(
+        "# Same\n\n# Same\n\n[first](#same) [second](#same-1)\n")
+    assert check_docs.check_repo(tmp_path) == []

@@ -1,0 +1,141 @@
+#!/usr/bin/env python3
+"""Markdown link checker: relative file links and internal anchors.
+
+Docs rot silently — a renamed module or a reworded heading breaks
+``docs/*.md`` cross-references without failing anything. This checker walks
+every ``*.md`` in the repo (skipping dot-directories) and verifies, with the
+standard library only:
+
+* relative file links ``[text](path)`` resolve to an existing file or
+  directory (relative to the markdown file's own directory);
+* anchor links ``[text](#heading)`` and ``[text](path#heading)`` point at a
+  heading that GitHub's slugifier would produce in the target file;
+* external links (``http(s)://``, ``mailto:``) are NOT fetched — offline CI
+  must stay deterministic.
+
+Run from anywhere: ``python tools/check_docs.py [repo_root]``. Exit code 1
+when any link is broken; the CI ``docs`` job runs this on every PR.
+"""
+from __future__ import annotations
+
+import functools
+import re
+import sys
+from pathlib import Path
+from typing import Dict, List, Set
+
+# [text](target) — but not ![image](...) captures too; images use the same
+# resolution rules so they are checked identically. Nested brackets in the
+# text are out of scope.
+_LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+_HEADING_RE = re.compile(r"^(#{1,6})\s+(.*?)\s*#*\s*$")
+_CODE_FENCE_RE = re.compile(r"^(```|~~~)")
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's anchor slug: strip markdown emphasis/code ticks, lowercase,
+    drop punctuation except hyphens/underscores, spaces become hyphens.
+    Underscores stay — GitHub keeps them (``payload_bytes`` →
+    ``#payload_bytes``); stripping them as emphasis would mis-slug every
+    code-identifier heading."""
+    text = re.sub(r"[`*]", "", heading)
+    text = re.sub(r"\[([^\]]*)\]\([^)]*\)", r"\1", text)  # linked headings
+    text = text.strip().lower()
+    text = re.sub(r"[^\w\- ]", "", text)
+    return text.replace(" ", "-")
+
+
+def strip_fenced_code(text: str) -> str:
+    """Blank out every line inside ``` / ~~~ fenced blocks (fences may be
+    indented, e.g. inside list items — detection matches on the stripped
+    line, the same rule ``heading_slugs`` uses), so link-looking strings
+    in code examples are never link-checked."""
+    out: List[str] = []
+    in_fence = False
+    for line in text.splitlines():
+        if _CODE_FENCE_RE.match(line.strip()):
+            in_fence = not in_fence
+            out.append("")
+            continue
+        out.append("" if in_fence else line)
+    return "\n".join(out)
+
+
+@functools.lru_cache(maxsize=None)
+def heading_slugs(md_path: Path) -> Set[str]:
+    """All anchor slugs a markdown file exposes (dedup suffixes -1, -2 …
+    the way GitHub numbers repeated headings). Fenced code blocks are
+    skipped so ``# comment`` lines inside ``` fences aren't headings."""
+    counts: Dict[str, int] = {}
+    slugs: Set[str] = set()
+    for line in strip_fenced_code(
+            md_path.read_text(encoding="utf-8")).splitlines():
+        m = _HEADING_RE.match(line)
+        if not m:
+            continue
+        slug = github_slug(m.group(2))
+        n = counts.get(slug, 0)
+        counts[slug] = n + 1
+        slugs.add(slug if n == 0 else f"{slug}-{n}")
+    return slugs
+
+
+def iter_markdown(root: Path):
+    for p in sorted(root.rglob("*.md")):
+        if any(part.startswith(".") for part in p.relative_to(root).parts[:-1]):
+            continue            # .git, .github READMEs stay out of scope
+        yield p
+
+
+def check_file(md: Path, root: Path) -> List[str]:
+    errors: List[str] = []
+    text = strip_fenced_code(md.read_text(encoding="utf-8"))
+    text = re.sub(r"`[^`\n]*`", "", text)       # inline code is not links
+    for m in _LINK_RE.finditer(text):
+        target = m.group(1)
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        path_part, _, anchor = target.partition("#")
+        if path_part:
+            dest = (md.parent / path_part).resolve()
+            if not dest.exists():
+                errors.append(f"{md.relative_to(root)}: broken link "
+                              f"'{target}' -> {path_part} does not exist")
+                continue
+        else:
+            dest = md
+        if anchor:
+            if dest.suffix != ".md" or dest.is_dir():
+                continue        # anchors into non-markdown: out of scope
+            if anchor not in heading_slugs(dest):
+                errors.append(f"{md.relative_to(root)}: broken anchor "
+                              f"'{target}' — no heading slug '#{anchor}' in "
+                              f"{dest.relative_to(root)}")
+    return errors
+
+
+def check_repo(root: Path) -> List[str]:
+    errors: List[str] = []
+    for md in iter_markdown(root):
+        errors.extend(check_file(md, root))
+    return errors
+
+
+def main(argv=None) -> int:
+    argv = argv if argv is not None else sys.argv[1:]
+    root = Path(argv[0]).resolve() if argv else Path(__file__).resolve().parents[1]
+    errors = check_repo(root)
+    n_files = len(list(iter_markdown(root)))
+    if errors:
+        print(f"check_docs: {len(errors)} broken link(s) across "
+              f"{n_files} markdown files:")
+        for e in errors:
+            print(f"  {e}")
+        return 1
+    print(f"check_docs: OK — {n_files} markdown files, all relative links "
+          f"and anchors resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
