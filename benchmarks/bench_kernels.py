@@ -1,7 +1,13 @@
 """Kernel micro-benchmarks: wall time of the jnp reference path on CPU (the
 Pallas kernels themselves target TPU; interpret mode is a correctness tool,
 not a timing tool) + derived wire-compression ratios of the fused
-bottleneck-quant payload."""
+bottleneck-quant payload + the fused mixed-mode boundary (the op the
+serving engine executes on every decode tick for every slot).
+
+Runs in CI as a smoke test:
+
+    PYTHONPATH=src python benchmarks/bench_kernels.py
+"""
 from __future__ import annotations
 
 import time
@@ -40,11 +46,42 @@ def run() -> Dict:
     rs_ref = jax.jit(ref.rglru_scan_ref)
     us_rs = _time(rs_ref, a, b, iters=5)
 
+    # fused mixed-mode boundary: a 32-slot decode pool, every slot on its
+    # own mode (this is the per-tick serving op). On CPU the dispatcher
+    # runs the jnp reference — what bench_serving actually pays per tick;
+    # the interpret-mode kernel is exercised once for correctness.
+    d, B = 512, 32
+    widths_bits = [(128, 8), (256, 4), (128, 1), (512, 0)]
+    wmax = max(w for w, _ in widths_bits)
+    stacked = {
+        "down_w": jnp.stack([
+            jnp.pad(0.05 * jax.random.normal(key, (d, w)),
+                    ((0, 0), (0, wmax - w))).astype(jnp.bfloat16)
+            for w, _ in widths_bits]),
+        "up_w": jnp.stack([
+            jnp.pad(0.05 * jax.random.normal(key, (w, d)),
+                    ((0, wmax - w), (0, 0))).astype(jnp.bfloat16)
+            for w, _ in widths_bits]),
+        "norm_scale": jnp.ones((len(widths_bits), d), jnp.bfloat16),
+        "width": jnp.asarray([w for w, _ in widths_bits], jnp.int32),
+        "bits": jnp.asarray([b_ for _, b_ in widths_bits], jnp.int32),
+    }
+    xb = jax.random.normal(key, (B, 1, d)).astype(jnp.bfloat16)
+    modes = jnp.arange(B, dtype=jnp.int32) % (len(widths_bits) + 1)
+    bm = jax.jit(lambda s, x, m: ops.boundary_mixed_op(s, x, m))
+    us_bm = _time(bm, stacked, xb, modes)
+    y_i = ops.boundary_mixed_op(stacked, xb, modes, interpret=True)
+    y_r = ref.boundary_mixed_ref(stacked, xb, modes)
+    bm_ok = bool(jnp.isfinite(y_i.astype(jnp.float32)).all()
+                 and jnp.max(jnp.abs(y_i.astype(jnp.float32)
+                                     - y_r.astype(jnp.float32))) < 0.05)
+
     raw_bytes = M * K * 2                          # boundary bf16
     wire_bytes = M * N * 1 + M * 2                 # int8 + scales
     return {
         "bottleneck_quant_us": us_bq, "dequant_matmul_us": us_dq,
         "rglru_scan_us": us_rs,
+        "boundary_mixed_us": us_bm, "boundary_mixed_parity_ok": bm_ok,
         "wire_compression": wire_bytes / raw_bytes,
     }
 
@@ -55,6 +92,10 @@ def main():
           f"wire_ratio={out['wire_compression']:.4f}")
     print(f"kernel_dequant_matmul,{out['dequant_matmul_us']:.0f},decoder_side")
     print(f"kernel_rglru_scan,{out['rglru_scan_us']:.0f},B4xS1024xD512")
+    print(f"kernel_boundary_mixed,{out['boundary_mixed_us']:.0f},"
+          f"B32x5modes,parity_ok={out['boundary_mixed_parity_ok']}")
+    assert out["boundary_mixed_parity_ok"], \
+        "interpret-mode boundary kernel diverged from the jnp reference"
 
 
 if __name__ == "__main__":

@@ -9,7 +9,13 @@ token, slot occupancy, and how often the decode batch was genuinely
 per-request-selection property that static-batch serving can't express.
 
 Also times the admission hot path head to head: batched full-sequence
-prefill (one jitted call) vs the legacy token-at-a-time decode-step loop.
+prefill (one jitted call) vs the legacy token-at-a-time decode-step loop —
+and the decode hot path head to head: the device-resident tick (argmax +
+token feedback + position increment fused into the jitted step, donated
+pool buffers, one-tick-lagged host sync) vs the legacy host loop
+(``host_loop=True``), on identical workloads that decode token-identical
+streams. The speedup lands in ``--json`` as ``engine_comparison`` and CI
+gates on it.
 
 ``--channel-trace {static,fade,burst}`` adds the paper's dynamic-adaptation
 A/B: every session rides the *same* scripted capacity trace
@@ -65,14 +71,15 @@ def make_requests(cfg, n: int, *, prompt_len: int, gen: int,
 
 
 def run_level(params, cfg, *, n_requests: int, arrival_every: int,
-              n_slots: int, prompt_len: int, gen: int) -> dict:
+              n_slots: int, prompt_len: int, gen: int,
+              host_loop: bool = False) -> dict:
     orch = Orchestrator(
         [ModeProfile(m, BN.mode_payload_bytes(cfg, 1, 1, m), float(m))
          for m in range(cfg.split.n_modes)],
         AppRequirement(latency_budget_s=0.006), ema=0.5, hysteresis=1.0)
     eng = ContinuousBatchingEngine(params, cfg, n_slots=n_slots,
                                    cache_len=max(64, prompt_len + gen + 8),
-                                   orchestrator=orch)
+                                   orchestrator=orch, host_loop=host_loop)
     reqs = make_requests(cfg, n_requests, prompt_len=prompt_len, gen=gen,
                          arrival_every=arrival_every)
     # warm every compiled path the measured run can hit (decode + each
@@ -108,6 +115,63 @@ def run_level(params, cfg, *, n_requests: int, arrival_every: int,
             1e3 * float(np.mean([s.transfer_s / max(len(s.tokens), 1)
                                  for s in done])), 3) if done else 0.0,
     }
+
+
+def compare_engine_loops(params, cfg, *, n_slots: int, prompt_len: int,
+                         gen: int, n_requests: int, repeats: int = 4) -> dict:
+    """Decode throughput of the device-resident windowed decode loop vs the
+    legacy host loop (``host_loop=True`` — the pre-device-loop engine
+    preserved verbatim) on an identical saturating workload. The two decode
+    token-identical streams (pinned by tests/test_device_loop.py), so the
+    speedup is pure hot-path overhead removal: whole decode windows
+    dispatched as one jitted scan (fused argmax + token feedback + position
+    increments), donated pool buffers, and the one-window-lagged host sync.
+
+    Runs are interleaved host/device/host/device and each side reports its
+    best repeat, so machine-load drift hits both engines symmetrically."""
+    engines = {}
+    for key, host_loop in [("host_loop", True), ("device_loop", False)]:
+        orch = Orchestrator(
+            [ModeProfile(m, BN.mode_payload_bytes(cfg, 1, 1, m), float(m))
+             for m in range(cfg.split.n_modes)],
+            AppRequirement(latency_budget_s=0.006), ema=0.5, hysteresis=1.0)
+        eng = ContinuousBatchingEngine(
+            params, cfg, n_slots=n_slots,
+            cache_len=max(64, prompt_len + gen + 8), orchestrator=orch,
+            host_loop=host_loop)
+        # decode-dominated workload: every request present at tick 0 with
+        # short prompts and a long generation, so wall clock measures the
+        # per-tick loop, not admission
+        eng.warm(make_requests(cfg, 1, prompt_len=prompt_len, gen=gen,
+                               arrival_every=0)[0].prompt)
+        engines[key] = eng
+    out = {k: {"decode_tok_per_s": 0.0} for k in engines}
+    for _ in range(repeats):
+        for key, eng in engines.items():
+            eng.reset_counters()
+            reqs = make_requests(cfg, n_requests, prompt_len=prompt_len,
+                                 gen=gen, arrival_every=0)
+            t0 = time.perf_counter()
+            eng.run(reqs)
+            wall = time.perf_counter() - t0
+            st = eng.stats()
+            rate = round(st["decode_tokens"] / max(wall, 1e-9), 1)
+            if rate > out[key]["decode_tok_per_s"]:
+                out[key] = {
+                    "decode_tok_per_s": rate,
+                    "decode_ticks": st["decode_ticks"],
+                    "slot_occupancy": round(
+                        st["decode_tokens"]
+                        / max(st["decode_ticks"] * n_slots, 1), 3),
+                }
+    out["n_slots"] = n_slots
+    out["gen"] = gen
+    out["requests"] = n_requests
+    out["repeats"] = repeats
+    out["decode_speedup"] = round(
+        out["device_loop"]["decode_tok_per_s"]
+        / max(out["host_loop"]["decode_tok_per_s"], 1e-9), 2)
+    return out
 
 
 def build_capacity_trace(kind: str, n_ticks: int, hi_bps: float,
@@ -268,6 +332,11 @@ def main(argv=None):
     ap.add_argument("--prefill-prompt-len", type=int, default=64,
                     help="prompt length for the batched-vs-loop TTFT "
                          "comparison")
+    ap.add_argument("--compare-slots", type=int, default=8,
+                    help="slot-pool size for the device-loop vs host-loop "
+                         "decode throughput A/B (0 disables it)")
+    ap.add_argument("--compare-gen", type=int, default=24,
+                    help="decode tokens per request in the loop A/B")
     ap.add_argument("--channel-trace", default=None,
                     choices=["static", "fade", "burst"],
                     help="run the adaptive-vs-frozen mode-policy A/B on a "
@@ -313,6 +382,17 @@ def main(argv=None):
           f"levels={len(levels)},prefill_speedup={pf['ttft_speedup']}x")
     out = {"arch": args.arch, "n_slots": args.n_slots,
            "prefill_comparison": pf, "levels": levels}
+
+    if args.compare_slots:
+        ec = compare_engine_loops(
+            params, cfg, n_slots=args.compare_slots,
+            prompt_len=args.prompt_len, gen=args.compare_gen,
+            n_requests=max(args.requests, 2 * args.compare_slots))
+        out["engine_comparison"] = ec
+        print(f"engine_comparison,slots={ec['n_slots']},"
+              f"device_tok/s={ec['device_loop']['decode_tok_per_s']} "
+              f"host_tok/s={ec['host_loop']['decode_tok_per_s']} "
+              f"decode_speedup={ec['decode_speedup']}x")
 
     if args.channel_trace:
         tr = run_channel_trace(params, cfg, args.channel_trace,

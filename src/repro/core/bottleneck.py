@@ -105,39 +105,21 @@ def bank_stack(bank, split: SplitConfig):
 def boundary_mixed(stacked, x, mode_idx, *, dtype=jnp.bfloat16):
     """Per-slot bottleneck at the split boundary inside one jitted step.
 
-    x: [B, 1, d] boundary activation; mode_idx: [B] int32 in [0, M] where 0
-    means "transmit the raw code z" and m >= 1 routes slot b through
-    bottleneck head m-1 (gathered from the stacked bank). Simulates the
-    wire round-trip (quantize -> dequantize) with each slot's own bit
-    width. Returns the decoder-side activation [B, 1, d].
+    x: [B, S, d] boundary activation ([B, 1, d] at decode); mode_idx: [B]
+    int32 in [0, M] where 0 means "transmit the raw code z" and m >= 1
+    routes slot b through bottleneck head m-1 (gathered from the stacked
+    bank). Simulates the wire round-trip (quantize -> dequantize) with each
+    slot's own bit width. Returns the decoder-side activation [B, S, d].
+
+    This is a dispatcher: on TPU (128-aligned model and bank widths) it
+    runs the fused mode-grouped Pallas kernel
+    (``repro.kernels.boundary_mixed``); everywhere else — CPU serving,
+    unaligned widths — it runs the pure-jnp reference
+    (``repro.kernels.ref.boundary_mixed_ref``). The two are parity-pinned
+    by ``tests/test_kernels.py`` across every calibrated bit width.
     """
-    eps = 1e-6
-    hid = jnp.clip(mode_idx - 1, 0, stacked["width"].shape[0] - 1)  # [B]
-    # layer A: per-slot rmsnorm + down-projection
-    xf = x.astype(jnp.float32)
-    h = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
-    h = h * stacked["norm_scale"][hid][:, None, :].astype(jnp.float32)
-    z = jnp.einsum("bsd,bdw->bsw", h.astype(x.dtype),
-                   stacked["down_w"][hid]).astype(jnp.float32)
-    lane = jnp.arange(z.shape[-1])
-    z = jnp.where(lane[None, None, :] < stacked["width"][hid][:, None, None],
-                  z, 0.0)
-    # wire: row-wise symmetric quantization with per-slot bit width
-    # (bits == 0 modes ship the code unquantized, so the roundtrip is skipped)
-    bits_h = stacked["bits"][hid][:, None, None]
-    # same floor-at-1 as quant.qmax: bits=1 is the ternary code, never a
-    # zero qmax (the two wire paths are pinned to agree by tests)
-    qm = jnp.maximum(
-        jnp.left_shift(1, jnp.maximum(bits_h, 1) - 1) - 1, 1
-    ).astype(jnp.float32)
-    absmax = jnp.max(jnp.abs(z), axis=-1, keepdims=True)
-    scale = jnp.maximum(absmax, 1e-8) / qm
-    codes = jnp.clip(jnp.round(z / scale), -qm, qm)
-    wired = jnp.where(bits_h == 0, z, codes * scale)
-    # layer B: up-projection adapter back into the decoder width
-    y = jnp.einsum("bsw,bwd->bsd", wired.astype(dtype),
-                   stacked["up_w"][hid])
-    return jnp.where(mode_idx[:, None, None] == 0, x, y.astype(x.dtype))
+    from repro.kernels import ops
+    return ops.boundary_mixed_op(stacked, x, mode_idx, dtype=dtype)
 
 
 def mode_payload_bytes(cfg: ModelConfig, batch: int, seq: int, mode: int) -> int:

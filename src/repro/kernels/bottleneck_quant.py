@@ -56,7 +56,9 @@ def bottleneck_quant(x, w, *, bits: int = 8, block_m: int = 128,
     assert K == K2, (x.shape, w.shape)
     assert M % block_m == 0 and K % block_k == 0, (M, K, block_m, block_k)
     n_k = K // block_k
-    qmax = (1 << (bits - 1)) - 1
+    # floor at 1 to match quant.qmax and boundary_mixed: bits=1 is the
+    # ternary {-1, 0, 1} wire code, not a division by zero
+    qmax = max((1 << (bits - 1)) - 1, 1)
 
     grid = (M // block_m, n_k)
     return pl.pallas_call(

@@ -1,0 +1,142 @@
+"""Pallas TPU kernel: fused mixed-mode bottleneck boundary — the whole
+UE->wire->edge crossing (layer A, quantize -> dequantize, layer B) for a
+continuous batch where every row rides its own orchestrator-chosen mode.
+
+This is the operation the paper inserts on *every* query, so its cost — not
+just its wire bytes — governs the complexity/relevance tradeoff. The jnp
+path (``kernels.ref.boundary_mixed_ref``) pads every row to the widest mode
+and gathers a per-row weight tensor; here the caller (``kernels.ops``)
+pre-groups rows into mode-uniform blocks so that, per block:
+
+* the block's head weights are gathered ONCE via scalar-prefetch index maps
+  (no [B, d, wmax] materialized gather, no cross-mode branching);
+* the down-projection runs chunk-by-chunk over the head's TRUE width —
+  ``ceil(width / block_w)`` grid steps instead of ``wmax / block_w`` — so
+  narrow-mode rows do narrow-mode work instead of wmax-padded work;
+* the f32 activation, the quantization scale, and the dequantized code all
+  live in VMEM scratch; nothing but the final decoder-side activation (in
+  the model dtype) is ever written back to HBM;
+* raw-mode rows (mode 0) skip every matmul and pass the boundary through.
+
+Grid: (row_blocks, wmax / block_w) — the width-chunk dimension is innermost
+so each block's z accumulator completes before its quantize + up-projection
+epilogue. Scalar-prefetch tables (head id, chunk count, true width, bit
+width — one entry per row block) drive both the index maps and the in-kernel
+``pl.when`` guards.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(hid_ref, nch_ref, wid_ref, bit_ref, x_ref, down_ref, up_ref,
+            norm_ref, out_ref, h_scr, z_scr, *, n_w: int, block_w: int,
+            dtype):
+    g = pl.program_id(0)
+    w = pl.program_id(1)
+    nch = nch_ref[g]                    # chunks of this block's true width
+    width = wid_ref[g]                  # true bottleneck width (0 = raw)
+    bits = bit_ref[g]                   # wire bit width (0 = unquantized)
+
+    @pl.when((w == 0) & (nch > 0))
+    def _prep():
+        # layer A prologue: rmsnorm in f32, cast back to the model dtype —
+        # shared by every width chunk of this row block
+        z_scr[...] = jnp.zeros_like(z_scr)
+        xf = x_ref[...].astype(jnp.float32)
+        h = xf * jax.lax.rsqrt(
+            jnp.mean(xf * xf, axis=-1, keepdims=True) + 1e-6)
+        h = h * norm_ref[0].astype(jnp.float32)
+        h_scr[...] = h.astype(h_scr.dtype)
+
+    @pl.when(w < nch)
+    def _down_chunk():
+        # one MXU tile of the down-projection; chunks past ``nch`` are
+        # skipped entirely (their index maps clamp to the last real chunk,
+        # so no extra weight traffic either). f32 accumulation + explicit
+        # round to the model dtype == XLA's own bf16-GEMM semantics, and is
+        # reproducible between compiled, interpret, and oracle paths.
+        z = jnp.dot(h_scr[...], down_ref[0],
+                    preferred_element_type=jnp.float32
+                    ).astype(h_scr.dtype).astype(jnp.float32)
+        lane = w * block_w + jax.lax.broadcasted_iota(
+            jnp.int32, (1, block_w), 1)
+        z_scr[:, pl.ds(pl.multiple_of(w * block_w, block_w), block_w)] = \
+            jnp.where(lane < width, z, 0.0)
+
+    @pl.when(w == n_w - 1)
+    def _epilogue():
+        @pl.when(nch == 0)
+        def _raw():                      # mode 0: transmit the raw code z
+            out_ref[...] = x_ref[...]
+
+        @pl.when(nch > 0)
+        def _wire_and_up():
+            # wire round-trip in VMEM: row-wise symmetric quantization at
+            # this block's bit width (same floor-at-1 as quant.qmax —
+            # bits=1 is the ternary code), then layer B
+            z = z_scr[...]
+            qm = jnp.maximum(
+                jnp.left_shift(1, jnp.maximum(bits, 1) - 1) - 1, 1
+            ).astype(jnp.float32)
+            absmax = jnp.max(jnp.abs(z), axis=-1, keepdims=True)
+            scale = jnp.maximum(absmax, 1e-8) / qm
+            codes = jnp.clip(jnp.round(z / scale), -qm, qm)
+            wired = jnp.where(bits == 0, z, codes * scale)
+            y = jnp.dot(wired.astype(dtype), up_ref[0],
+                        preferred_element_type=jnp.float32)
+            out_ref[...] = y.astype(out_ref.dtype)
+
+
+def boundary_mixed_grouped(xp, down_w, up_w, norm_scale, hid_g, nchunk_g,
+                           width_g, bits_g, *, block_r: int,
+                           block_w: int = 128, dtype=jnp.bfloat16,
+                           interpret: bool = False):
+    """Mode-grouped fused boundary. ``xp``: [P, d] rows already permuted so
+    each ``block_r``-row block is mode-uniform (see ``ops._group_rows``);
+    ``down_w``/``up_w``/``norm_scale``: the stacked bank ([M, d, wmax] /
+    [M, wmax, d] / [M, d]); per-block int32 tables: ``hid_g`` head row,
+    ``nchunk_g`` width chunks (0 = raw passthrough), ``width_g`` true
+    width, ``bits_g`` wire bits. Returns [P, d] decoder-side activations.
+
+    P % block_r == 0, d % 128 == 0, wmax % block_w == 0 required
+    (ops.py falls back to the jnp reference otherwise).
+    """
+    P, d = xp.shape
+    M, d2, wmax = down_w.shape
+    assert d == d2, (xp.shape, down_w.shape)
+    assert P % block_r == 0 and d % 128 == 0 and wmax % block_w == 0, \
+        (P, d, wmax, block_r, block_w)
+    G = P // block_r
+    n_w = wmax // block_w
+    assert hid_g.shape == (G,), (hid_g.shape, G)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=(G, n_w),
+        in_specs=[
+            pl.BlockSpec((block_r, d), lambda g, w, *s: (g, 0)),
+            pl.BlockSpec(
+                (1, d, block_w),
+                lambda g, w, hid, nch, wd, bt: (
+                    hid[g], 0, jnp.minimum(w, jnp.maximum(nch[g] - 1, 0)))),
+            pl.BlockSpec((1, wmax, d), lambda g, w, hid, *s: (hid[g], 0, 0)),
+            pl.BlockSpec((1, d), lambda g, w, hid, *s: (hid[g], 0)),
+        ],
+        out_specs=pl.BlockSpec((block_r, d), lambda g, w, *s: (g, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((block_r, d), xp.dtype),          # normed activation
+            pltpu.VMEM((block_r, wmax), jnp.float32),    # z accumulator
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel, n_w=n_w, block_w=block_w, dtype=dtype),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((P, d), xp.dtype),
+        interpret=interpret,
+    )(hid_g, nchunk_g, width_g, bits_g, xp, down_w, up_w, norm_scale)

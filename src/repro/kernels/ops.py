@@ -10,6 +10,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import bottleneck_quant as _bq
+from repro.kernels import boundary_mixed as _bm
 from repro.kernels import dequant_matmul as _dq
 from repro.kernels import rglru_scan as _rs
 from repro.kernels import ref
@@ -46,6 +47,97 @@ def bottleneck_quant_op(x, w, *, bits: int = 8, interpret: bool | None = None):
         codes, scales = _bq.bottleneck_quant(x2, w, bits=bits, block_m=bm,
                                              block_k=bk, interpret=interp)
     return codes.reshape(*lead, N), scales.reshape(*lead, 1)
+
+
+def _group_rows(mode_idx, n_modes: int, block_r: int):
+    """Mode-uniform row-block layout for the fused boundary kernel.
+
+    Rows are stably sorted by mode and each mode's run is padded up to a
+    multiple of ``block_r``, so every ``block_r``-row block of the permuted
+    layout carries exactly one mode. Returns (dest [B] int32 — each row's
+    slot in the padded layout, starts [n_modes] int32 — each mode's padded
+    offset, total padded row count P). P is static:
+    ``(ceil(B / block_r) + n_modes) * block_r`` always suffices, because
+    each mode group wastes at most ``block_r - 1`` pad rows.
+    """
+    B = mode_idx.shape[0]
+    order = jnp.argsort(mode_idx)                       # stable in jax
+    counts = jnp.zeros(n_modes, jnp.int32).at[mode_idx].add(1)
+    padded = ((counts + block_r - 1) // block_r) * block_r
+    starts = jnp.cumsum(padded) - padded                # exclusive cumsum
+    cum = jnp.cumsum(counts) - counts
+    sortedm = mode_idx[order]
+    rank = jnp.arange(B, dtype=jnp.int32) - cum[sortedm]
+    dest = jnp.zeros(B, jnp.int32).at[order].set(
+        (starts[sortedm] + rank).astype(jnp.int32))
+    P = (-(-B // block_r) + n_modes) * block_r
+    return dest, starts, padded, P
+
+
+def boundary_mixed_op(stacked, x, mode_idx, *, dtype=jnp.bfloat16,
+                      interpret: bool | None = None):
+    """Fused mixed-mode bottleneck boundary (dispatcher).
+
+    Deliberately NOT jitted itself: every serving caller already invokes it
+    inside a jitted step (where it traces straight through), and wrapping a
+    jit here would change eager callers' op-by-op bf16 rounding against the
+    pinned per-mode reference path.
+
+    x: [B, S, d] boundary activations, ``mode_idx``: [B] int32 in [0, M]
+    (0 = raw passthrough, m >= 1 = head m-1 of the ``stacked`` bank).
+    Routes to the Pallas kernel on TPU (or when ``interpret=True`` — the
+    CPU correctness path for tests); everything else — including
+    non-128-aligned model/bank widths — takes the jnp reference, which is
+    also the fast CPU serving path (interpret mode is a correctness tool,
+    not a speed tool).
+    """
+    use_pallas = _ON_TPU if interpret is None else bool(interpret)
+    interp = (not _ON_TPU) if interpret is None else bool(interpret)
+    d = x.shape[-1]
+    M, _, wmax = stacked["down_w"].shape
+    if not use_pallas or d % 128 or wmax % 128:
+        return ref.boundary_mixed_ref(stacked, x, mode_idx, dtype=dtype)
+
+    B, S = x.shape[0], x.shape[1]
+    block_r = 16 if jnp.dtype(x.dtype).itemsize == 2 else 8
+    block_w = 128
+    rmode = jnp.repeat(mode_idx.astype(jnp.int32), S)   # per-token mode
+    dest, tables = group_layout(stacked, rmode, block_r, block_w)
+    xp = jnp.zeros((tables["P"], d), x.dtype).at[dest].set(
+        x.reshape(B * S, d))
+    yp = _bm.boundary_mixed_grouped(
+        xp, stacked["down_w"], stacked["up_w"], stacked["norm_scale"],
+        tables["hid"], tables["nchunk"], tables["width"], tables["bits"],
+        block_r=block_r, block_w=block_w, dtype=dtype, interpret=interp)
+    return yp[dest].reshape(B, S, d)
+
+
+def group_layout(stacked, rmode, block_r: int, block_w: int):
+    """Row permutation + per-block tables for the grouped boundary kernel.
+
+    ``rmode``: [rows] int32 mode per row. Returns (dest [rows] int32 — each
+    row's slot in the mode-grouped padded layout, tables) where tables has
+    the static padded row count ``P`` and per-row-block int32 arrays:
+    ``hid`` (stacked-bank head), ``nchunk`` (width chunks; 0 = raw
+    passthrough), ``width``, ``bits``. Blocks past the used span behave as
+    raw rows and are never gathered back.
+    """
+    M = stacked["width"].shape[0]
+    dest, starts, padded, P = _group_rows(rmode, M + 1, block_r)
+    G = P // block_r
+    bstart = jnp.arange(G, dtype=jnp.int32) * block_r
+    used = bstart < jnp.sum(padded)
+    bmode = jnp.clip(jnp.searchsorted(starts, bstart, side="right") - 1,
+                     0, M)
+    bmode = jnp.where(used, bmode, 0).astype(jnp.int32)
+    hid_g = jnp.clip(bmode - 1, 0, M - 1).astype(jnp.int32)
+    width_g = jnp.where(bmode >= 1, stacked["width"][hid_g], 0)
+    bits_g = jnp.where(bmode >= 1, stacked["bits"][hid_g], 0)
+    nchunk_g = (width_g + block_w - 1) // block_w
+    return dest, {"P": P, "hid": hid_g,
+                  "nchunk": nchunk_g.astype(jnp.int32),
+                  "width": width_g.astype(jnp.int32),
+                  "bits": bits_g.astype(jnp.int32)}
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))

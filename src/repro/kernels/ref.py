@@ -11,11 +11,96 @@ def bottleneck_quant_ref(x, w, bits: int = 8):
     x: [M, K] bf16/f32, w: [K, N] -> (codes int8 [M, N], scales f32 [M, 1]).
     """
     z = (x.astype(jnp.float32) @ w.astype(jnp.float32))
-    qm = (1 << (bits - 1)) - 1
+    # same floor as quant.qmax: bits=1 is the ternary {-1, 0, 1} code, never
+    # a zero qmax (which made the scale infinite and the roundtrip NaN)
+    qm = max((1 << (bits - 1)) - 1, 1)
     absmax = jnp.max(jnp.abs(z), axis=-1, keepdims=True)
     scale = jnp.maximum(absmax, 1e-8) / qm
     codes = jnp.clip(jnp.round(z / scale), -qm, qm).astype(jnp.int8)
     return codes, scale
+
+
+def boundary_mixed_ref(stacked, x, mode_idx, *, dtype=jnp.bfloat16):
+    """Per-row mixed-mode bottleneck boundary (the fused-kernel oracle).
+
+    x: [B, S, d]; mode_idx: [B] int32 in [0, M] where 0 transmits the raw
+    code z and m >= 1 routes row b through head m-1 of ``stacked`` (see
+    ``bottleneck.bank_stack``): rmsnorm + down-projection (layer A), the
+    quantize -> dequantize wire round-trip at that row's bit width, and the
+    up-projection adapter (layer B). Returns [B, S, d] in ``x.dtype``.
+    """
+    eps = 1e-6
+    hid = jnp.clip(mode_idx - 1, 0, stacked["width"].shape[0] - 1)  # [B]
+    # layer A: per-row rmsnorm + down-projection
+    xf = x.astype(jnp.float32)
+    h = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    h = h * stacked["norm_scale"][hid][:, None, :].astype(jnp.float32)
+    z = jnp.einsum("bsd,bdw->bsw", h.astype(x.dtype),
+                   stacked["down_w"][hid]).astype(jnp.float32)
+    lane = jnp.arange(z.shape[-1])
+    z = jnp.where(lane[None, None, :] < stacked["width"][hid][:, None, None],
+                  z, 0.0)
+    # wire: row-wise symmetric quantization with per-row bit width
+    # (bits == 0 modes ship the code unquantized, so the roundtrip is skipped)
+    bits_h = stacked["bits"][hid][:, None, None]
+    # same floor-at-1 as quant.qmax: bits=1 is the ternary code, never a
+    # zero qmax (the two wire paths are pinned to agree by tests)
+    qm = jnp.maximum(
+        jnp.left_shift(1, jnp.maximum(bits_h, 1) - 1) - 1, 1
+    ).astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(z), axis=-1, keepdims=True)
+    scale = jnp.maximum(absmax, 1e-8) / qm
+    codes = jnp.clip(jnp.round(z / scale), -qm, qm)
+    wired = jnp.where(bits_h == 0, z, codes * scale)
+    # layer B: up-projection adapter back into the decoder width
+    y = jnp.einsum("bsw,bwd->bsd", wired.astype(dtype),
+                   stacked["up_w"][hid])
+    return jnp.where(mode_idx[:, None, None] == 0, x, y.astype(x.dtype))
+
+
+def boundary_mixed_grouped_ref(xp, down_w, up_w, norm_scale, hid_g, nchunk_g,
+                               width_g, bits_g, *, block_r: int,
+                               block_w: int = 128, dtype=jnp.bfloat16):
+    """Pure-jnp oracle for ``boundary_mixed.boundary_mixed_grouped`` that
+    mirrors the kernel's blocked computation EXACTLY (same block shapes,
+    same dtypes, same op order), so the Pallas kernel is pinned bit-for-bit
+    against it in tests. It differs from :func:`boundary_mixed_ref` only by
+    GEMM accumulation shape (mode-grouped block dots vs one batched-gather
+    einsum), i.e. by bf16 rounding noise — never by wire semantics.
+    Test-scale only (python loop over row blocks).
+    """
+    P, d = xp.shape
+    M, _, wmax = down_w.shape
+    outs = []
+    for g in range(P // block_r):
+        rows = xp[g * block_r:(g + 1) * block_r]
+        hid, nch = int(hid_g[g]), int(nchunk_g[g])
+        width, bits = int(width_g[g]), int(bits_g[g])
+        if nch == 0:                           # raw passthrough (mode 0)
+            outs.append(rows)
+            continue
+        xf = rows.astype(jnp.float32)
+        h = xf * jax.lax.rsqrt(
+            jnp.mean(xf * xf, axis=-1, keepdims=True) + 1e-6)
+        h = (h * norm_scale[hid].astype(jnp.float32)).astype(xp.dtype)
+        z = jnp.zeros((block_r, wmax), jnp.float32)
+        for w in range(nch):
+            zc = jnp.dot(
+                h, down_w[hid, :, w * block_w:(w + 1) * block_w],
+                preferred_element_type=jnp.float32
+            ).astype(xp.dtype).astype(jnp.float32)
+            lane = w * block_w + jnp.arange(block_w)
+            z = z.at[:, w * block_w:(w + 1) * block_w].set(
+                jnp.where(lane[None, :] < width, zc, 0.0))
+        qm = float(max((1 << (max(bits, 1) - 1)) - 1, 1))
+        absmax = jnp.max(jnp.abs(z), axis=-1, keepdims=True)
+        scale = jnp.maximum(absmax, 1e-8) / qm
+        codes = jnp.clip(jnp.round(z / scale), -qm, qm)
+        wired = z if bits == 0 else codes * scale
+        y = jnp.dot(wired.astype(dtype), up_w[hid],
+                    preferred_element_type=jnp.float32)
+        outs.append(y.astype(xp.dtype))
+    return jnp.concatenate(outs, axis=0)
 
 
 def dequant_matmul_ref(codes, scales, w, out_dtype=jnp.bfloat16):

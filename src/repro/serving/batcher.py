@@ -13,25 +13,37 @@ tick it:
    truncated or rejected (counted) instead of silently wrapping the rolling
    cache over the prompt;
 2. steps each active request's *own* simulated mmWave channel and picks
-   that request's bottleneck mode for THIS tick under the configured mode
-   policy — ``adaptive`` (a ``ModeController``: vectorized re-selection from
-   the link EWMA with dwell-time damping and deadline-aware escalation),
+   that request's bottleneck mode under the configured mode policy —
+   ``adaptive`` (a ``ModeController``: vectorized re-selection from the
+   link EWMA with dwell-time damping and deadline-aware escalation),
    ``per-tick`` (the orchestrator's scalar loop, the legacy default), or
    ``frozen`` (the admission-chosen mode for the session's whole life, the
-   baseline the paper's dynamic claim is measured against) — and
-3. runs ONE jitted mixed-mode decode step for the whole pool — per-slot
-   positions (sequences are at different depths) and per-slot mode indices
-   (the bottleneck head is a gather over the stacked mode bank, not a
-   Python branch), so a single compiled executable serves any mode mixture;
-4. accounts uplink bytes and simulated transfer latency per request and
-   retires finished sessions, freeing their slots.
+   baseline the paper's dynamic claim is measured against) — for every
+   tick of the next *decode window* (mode choice depends only on channel
+   observations and token counts, never on decoded token values, so whole
+   windows are decidable up front); and
+3. dispatches the window as ONE jitted ``lax.scan`` of the mixed-mode
+   decode step for the whole pool — per-slot positions (sequences are at
+   different depths), per-slot mode indices (the bottleneck head is a
+   gather over the stacked mode bank, not a Python branch), argmax + token
+   feedback + position increments fused on device against donated pool
+   buffers — and reads the window's int32 token block back one window
+   late, overlapping the host sync and all host bookkeeping with the next
+   window's device compute (see ``_step_device``);
+4. accounts uplink bytes and simulated transfer latency per request at
+   window-decision time and retires finished sessions at dispatch time,
+   freeing their slots (token values land at materialization).
 
 Free slots still ride through the decode step (the batch shape is static for
 jit); their outputs are ignored and their state is fully overwritten at the
-next admission.
+next admission. ``host_loop=True`` preserves the legacy synchronous
+per-tick loop (one blocking argmax round-trip per tick) as the measured
+baseline and equivalence oracle — ``tests/test_device_loop.py`` pins the
+two loops token-identical.
 """
 from __future__ import annotations
 
+import concurrent.futures as _cf
 import functools
 import time
 from typing import Dict, List, Optional, Tuple
@@ -56,10 +68,26 @@ def _slot_axis(cfg: ModelConfig) -> int:
     return 1 if cfg.homogeneous else 0
 
 
-@functools.partial(jax.jit, static_argnums=(3,))
-def _scatter_rows(pool_states, batch_states, slots, axis: int):
+# one shared pipeline worker: jitted decode steps execute here so the XLA
+# call (which releases the GIL) overlaps the main thread's per-tick
+# orchestrator / controller / channel bookkeeping. A single worker keeps
+# execution strictly FIFO — step t+1's closure reads step t's future, so
+# device-side ordering (and therefore every decoded token) is deterministic.
+_PIPELINE: Optional[_cf.ThreadPoolExecutor] = None
+
+
+def _pipeline() -> _cf.ThreadPoolExecutor:
+    global _PIPELINE
+    if _PIPELINE is None:
+        _PIPELINE = _cf.ThreadPoolExecutor(
+            max_workers=1, thread_name_prefix="decode-pipeline")
+    return _PIPELINE
+
+
+def _put_rows(pool_states, batch_states, slots, axis: int):
     """Scatter rows 0..len(slots)-1 of a batched prefill's state pytree into
-    the pool slots in ONE dispatch (slots are distinct by construction)."""
+    the pool slots (slots are distinct by construction) — the one shared
+    admission scatter both engine loops build on."""
     n = slots.shape[0]
 
     def put(p, b):
@@ -68,6 +96,29 @@ def _scatter_rows(pool_states, batch_states, slots, axis: int):
         return jnp.moveaxis(pb, 0, axis)
 
     return jax.tree.map(put, pool_states, batch_states)
+
+
+@functools.partial(jax.jit, static_argnums=(3,))
+def _scatter_rows(pool_states, batch_states, slots, axis: int):
+    """Host-loop admission: state scatter in ONE dispatch."""
+    return _put_rows(pool_states, batch_states, slots, axis)
+
+
+@functools.partial(jax.jit, static_argnums=(6,), donate_argnums=(0, 1))
+def _admit_scatter(pool_states, positions, cur_tokens, batch_states, slots,
+                   pos_vals, axis: int, first_tokens):
+    """Device-resident admission: install a prefilled batch's states,
+    positions, and first generated tokens into their pool slots in one
+    dispatch. The pool state and positions are donated — admission updates
+    the resident pool in place instead of copying it. ``cur_tokens`` is
+    deliberately NOT donated: the engine's one-tick-lagged sync may still
+    hold that buffer for a pending host read (and it is tiny)."""
+    n = slots.shape[0]
+    new_states = _put_rows(pool_states, batch_states, slots, axis)
+    positions = positions.at[slots].set(pos_vals)
+    cur_tokens = cur_tokens.at[slots].set(
+        first_tokens[:n].reshape((n,) + cur_tokens.shape[1:]))
+    return new_states, positions, cur_tokens
 
 
 def _bucket_len(n: int, lo: int = 8) -> int:
@@ -136,7 +187,9 @@ class ContinuousBatchingEngine:
                  controller: Optional[ModeController] = None,
                  freeze_modes: bool = False,
                  default_channel: Optional[Channel] = None,
-                 max_pending: int = 64):
+                 max_pending: int = 64,
+                 host_loop: bool = False,
+                 max_window: int = 16):
         if controller is not None:
             if freeze_modes:
                 raise ValueError("controller and freeze_modes are mutually "
@@ -177,7 +230,28 @@ class ContinuousBatchingEngine:
         self._tok_shape = ((n_slots, cfg.n_codebooks, 1)
                            if cfg.frontend == "audio" and cfg.n_codebooks > 1
                            else (n_slots, 1))
-        self.cur_tokens = np.zeros(self._tok_shape, np.int32)
+        self.host_loop = host_loop
+        self.max_window = max(int(max_window), 1)
+        if not host_loop:
+            # the device loop donates the pool state pytree; freshly
+            # initialized states may alias one zeros buffer across several
+            # leaves (XLA rejects donating the same buffer twice), so force
+            # each leaf onto its own buffer once, up front
+            self.pool.states = jax.tree.map(lambda a: a.copy(),
+                                            self.pool.states)
+        # device loop: tokens and positions are device-resident; the host
+        # only ever receives small int32 token arrays, one tick late
+        self.cur_tokens = (np.zeros(self._tok_shape, np.int32) if host_loop
+                           else jnp.zeros(self._tok_shape, jnp.int32))
+        self._positions = jnp.zeros(n_slots, jnp.int32)
+        #: (snapshot of (slot, session) pairs, step future) for the most
+        #: recently dispatched tick — materialized one tick later so the
+        #: host<->device sync overlaps the NEXT tick's device compute
+        self._inflight: Optional[tuple] = None
+        #: future of the last dispatched device step; while it is pending,
+        #: ``pool.states`` / ``cur_tokens`` / ``_positions`` are stale (and
+        #: possibly donated) — ``_sync_device_state`` re-homes them
+        self._future: Optional[_cf.Future] = None
         self._pending: List[Request] = []             # not yet "arrived"
 
         @jax.jit
@@ -185,12 +259,40 @@ class ContinuousBatchingEngine:
             return T.decode_step(params, tok, states, pos, cfg)
         self._mono_step = mono_step
 
+        # device-resident decode window: a [K, B] mode matrix drives K
+        # whole ticks in ONE jitted lax.scan — argmax + token feedback +
+        # position increments all on device, slot-pool state and positions
+        # donated so XLA updates the resident pool in place instead of
+        # copying the whole KV/recurrent pool every tick. Mode choice and
+        # budget-based retirement depend only on channels and counts (never
+        # on token values), so the host precomputes the window and reads
+        # the [K, B] token block back one window late. Free slots ride
+        # along (their positions drift, but admission rewrites them).
+        @functools.partial(jax.jit, donate_argnums=(2, 3))
+        def mono_step_dev(params, tok, states, positions, modes_k):
+            def body(carry, _modes):
+                tok, states, positions = carry
+                logits, new_states = T.decode_step(params, tok, states,
+                                                   positions, cfg)
+                nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                nxt = nxt.reshape(tok.shape)
+                return (nxt, new_states, positions + 1), nxt
+
+            carry, toks = jax.lax.scan(body, (tok, states, positions),
+                                       modes_k)
+            return (*carry, toks)
+        self._mono_step_dev = mono_step_dev
+
         @jax.jit
         def mono_prefill(params, toks, lengths):
             # fresh zero states materialize inside the jit (shapes are
-            # static per bucket) — no per-admission host allocation
+            # static per bucket) — no per-admission host allocation; the
+            # argmax rides inside the jit so only int32 tokens cross the
+            # host boundary
             states = T.init_decode_state(cfg, toks.shape[0], cache_len)
-            return T.prefill(params, toks, cfg, states, lengths=lengths)
+            logits, new_states = T.prefill(params, toks, cfg, states,
+                                           lengths=lengths)
+            return jnp.argmax(logits, -1).astype(jnp.int32), new_states
         self._mono_prefill = mono_prefill
 
         if self.stacked_bank is not None:
@@ -201,14 +303,33 @@ class ContinuousBatchingEngine:
                                                   modes)
             self._mixed_step = mixed_step
 
+            @functools.partial(jax.jit, donate_argnums=(3, 4))
+            def mixed_step_dev(params, stacked, tok, states, positions,
+                               modes_k):
+                def body(carry, modes):
+                    tok, states, positions = carry
+                    logits, new_states = SP.split_decode_step_mixed(
+                        params, stacked, tok, states, positions, cfg, modes)
+                    nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                    nxt = nxt.reshape(tok.shape)
+                    return (nxt, new_states, positions + 1), nxt
+
+                carry, toks = jax.lax.scan(body, (tok, states, positions),
+                                           modes_k)
+                return (*carry, toks)
+            self._mixed_step_dev = mixed_step_dev
+
             @jax.jit
             def mixed_prefill(params, stacked, toks, lengths, modes):
                 states = T.init_decode_state(cfg, toks.shape[0], cache_len)
-                return SP.split_prefill_mixed(params, stacked, toks, states,
-                                              cfg, modes, lengths=lengths)
+                logits, new_states = SP.split_prefill_mixed(
+                    params, stacked, toks, states, cfg, modes,
+                    lengths=lengths)
+                return jnp.argmax(logits, -1).astype(jnp.int32), new_states
             self._mixed_prefill = mixed_prefill
         else:
             self._mixed_step = None
+            self._mixed_step_dev = None
             self._mixed_prefill = None
 
     # -- submission -----------------------------------------------------------
@@ -238,6 +359,10 @@ class ContinuousBatchingEngine:
         (the prefill argmax is its whole generation) and frees its slot for
         the next queued request within the same tick."""
         while self.pool.n_free and len(self.queue):
+            if not self.host_loop:
+                # admission scatters into the resident pool buffers — the
+                # pipeline must land the in-flight step first
+                self._sync_device_state()
             admits = self._collect_admits()
             if not admits:            # everything popped was over capacity
                 break
@@ -298,23 +423,40 @@ class ContinuousBatchingEngine:
             lens[i] = req.prompt_len
             modes[i] = mode
         if self._mixed_prefill is not None:
-            logits, new_states = self._mixed_prefill(
+            first_dev, new_states = self._mixed_prefill(
                 self.params, self.stacked_bank, jnp.asarray(toks),
                 jnp.asarray(lens), jnp.asarray(modes))
         else:
-            logits, new_states = self._mono_prefill(
+            first_dev, new_states = self._mono_prefill(
                 self.params, jnp.asarray(toks), jnp.asarray(lens))
         self.prefill_calls += 1
         self.prefill_tokens += int(lens[:n].sum())
         self.prefill_padded_tokens += bp * blen
-        first = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        # admission-time sync: the argmax already ran inside the jit, so
+        # this materializes a tiny int32 array (once per admitted bucket,
+        # not once per decode tick)
+        first = np.asarray(first_dev, np.int32)
         now = time.monotonic()
-        # ONE scatter moves every admitted row into its pool slot
-        self.pool.write_rows(new_states, [a[1] for a in group],
-                             [a[0].prompt_len for a in group])
+        slots = [a[1] for a in group]
+        plens = [a[0].prompt_len for a in group]
+        if self.host_loop:
+            # ONE scatter moves every admitted row into its pool slot
+            self.pool.write_rows(new_states, slots, plens)
+        else:
+            # device-resident admission: states, positions, and first
+            # tokens land in the donated pool buffers in one dispatch
+            self.pool.states, self._positions, self.cur_tokens = \
+                _admit_scatter(self.pool.states, self._positions,
+                               self.cur_tokens, new_states,
+                               jnp.asarray(slots, jnp.int32),
+                               jnp.asarray(plens, jnp.int32),
+                               _slot_axis(self.cfg), first_dev)
+            for s, p in zip(slots, plens):
+                self.pool.positions[s] = p          # host-side bookkeeping
         for i, (req, slot, mode, budget, cap) in enumerate(group):
             tok = first[i]
-            self.cur_tokens[slot] = tok
+            if self.host_loop:
+                self.cur_tokens[slot] = tok
             sess = Session(request=req, slot=slot, admitted_tick=self.tick,
                            gen_budget=budget, admission_mode=mode,
                            mode_trace=[(self.tick, mode)])
@@ -355,8 +497,12 @@ class ContinuousBatchingEngine:
             self.orch.release(sess.request.rid)
 
     # -- decode ---------------------------------------------------------------
-    def _choose_modes(self) -> np.ndarray:
-        """Per-slot mode selection for THIS decode tick.
+    def _choose_modes(self, tick: Optional[int] = None) -> np.ndarray:
+        """Per-slot mode selection for ONE decode tick (``tick`` defaults
+        to the current one; the device loop calls this for each tick of a
+        decode window before dispatching the whole window — mode selection
+        depends only on channel observations and counts, never on decoded
+        token values, so whole windows are decidable up front).
 
         Every live session's own channel advances exactly one tick
         regardless of policy (identical observation streams make
@@ -374,6 +520,7 @@ class ContinuousBatchingEngine:
         every decode token whose simulated transfer exceeded the session's
         latency budget.
         """
+        tick = self.tick if tick is None else tick
         modes = np.zeros(self.pool.n_slots, np.int32)
         items = sorted(self.active.items())        # deterministic slot order
         caps = [sess.request.channel.step()
@@ -383,7 +530,7 @@ class ContinuousBatchingEngine:
         chosen = None
         if self.controller is not None and items:
             chosen = self.controller.step_modes(
-                [sess.request.rid for _, sess in items], caps, self.tick)
+                [sess.request.rid for _, sess in items], caps, tick)
         for i, (slot, sess) in enumerate(items):
             mode = 0
             if self.orch is not None:
@@ -415,13 +562,28 @@ class ContinuousBatchingEngine:
                 pb = bottleneck.mode_payload_bytes(self.cfg, 1, 1, 0)
                 sess.account(0, pb, 0.0)
             if sess.mode_trace and sess.mode_trace[-1][1] != mode:
-                sess.mode_trace.append((self.tick, mode))
+                sess.mode_trace.append((tick, mode))
             modes[slot] = mode
         return modes
 
     def step(self) -> bool:
         """One engine tick: admit, then one mixed-mode decode step over the
-        pool. Returns False when there is nothing left to do."""
+        pool. Returns False when there is nothing left to do.
+
+        The default loop is *device-resident*: argmax, token feedback, and
+        position increments happen inside the jitted step against donated
+        buffers, and the host only materializes the PREVIOUS tick's int32
+        tokens after dispatching the current one — so orchestrator /
+        controller / channel bookkeeping overlaps device compute instead of
+        serializing with it. ``host_loop=True`` keeps the legacy
+        synchronous loop (one argmax dispatch + blocking host round-trip
+        per tick) as the measured baseline and equivalence oracle.
+        """
+        return self._step_host() if self.host_loop else self._step_device()
+
+    def _step_host(self) -> bool:
+        """Legacy synchronous tick (the pre-device-loop engine, preserved
+        verbatim for A/B benchmarks and token-identity tests)."""
         self._deliver_arrivals()
         self._admit()
         if not self.active:
@@ -464,11 +626,145 @@ class ContinuousBatchingEngine:
         self.tick += 1
         return True
 
+    def _window_len(self) -> int:
+        """How many ticks the next device dispatch may cover: bounded by
+        the earliest session completion (retirement frees a slot — an
+        admission opportunity), the next pending arrival, and
+        ``max_window``; floored to a power of two so the jitted scan sees
+        O(log max_window) distinct lengths."""
+        rem = min((sess.gen_budget or sess.request.max_new_tokens)
+                  - (sess.pos - sess.request.prompt_len + 1)
+                  for sess in self.active.values())
+        k = max(rem, 1)
+        if self._pending:
+            k = min(k, max(min(r.arrival_tick for r in self._pending)
+                           - self.tick, 1))
+        k = min(k, self.max_window)
+        return 1 << (k.bit_length() - 1)
+
+    def _step_device(self) -> bool:
+        """Device-resident decode window with a one-window-lagged host sync.
+
+        Mode selection and budget-based retirement depend only on channel
+        observations and token COUNTS — never on decoded token VALUES — so
+        the host decides a whole window of ticks up front ([K, B] mode
+        matrix, K from ``_window_len``) and dispatches it as ONE jitted
+        lax.scan on the pipeline worker (XLA releases the GIL, so the next
+        window's orchestrator / controller / channel bookkeeping overlaps
+        device compute). Slot lifecycle stays tick-exact with the host
+        loop; token values land one window late, materialized while the
+        device crunches the next window. The decoded streams are
+        token-identical to ``host_loop=True`` — pinned by tests.
+        """
+        self._deliver_arrivals()
+        self._admit()
+        if not self.active:
+            self._materialize_inflight()
+            self._sync_device_state()
+            if self._pending:          # idle until the next arrival
+                self.tick = min(r.arrival_tick for r in self._pending)
+                return True
+            return False
+
+        k = self._window_len()
+        modes_k = np.stack([self._choose_modes(self.tick + i)
+                            for i in range(k)])
+        prev = self._inflight
+        fut = self._dispatch_device_step(modes_k)
+        # snapshot BEFORE retirement: these sessions each emit one token
+        # per window tick, whose values land at the next materialization
+        snapshot = sorted(self.active.items())
+        self._inflight = (snapshot, fut, k)
+
+        self.decode_ticks += k
+        active_slots = set(self.active)
+        for i in range(k):
+            if len({int(m) for s, m in enumerate(modes_k[i])
+                    if s in active_slots}) > 1:
+                self.mode_mix_ticks += 1
+
+        # budget-based retirement at dispatch time: frees slots for the
+        # next tick's admission without waiting for token values (sessions
+        # can only complete at the window's last tick — _window_len never
+        # overshoots the earliest completion)
+        for slot, sess in snapshot:
+            sess.pos += k
+            self.pool.positions[slot] += k
+            emitted = sess.pos - sess.request.prompt_len + 1  # incl. prefill
+            budget = sess.gen_budget or sess.request.max_new_tokens
+            if emitted >= budget:
+                sess.finished_tick = self.tick + k - 1
+                self._release_links(sess)
+                del self.active[slot]
+                self.pool.release(slot)
+        # sync the PREVIOUS window's tokens while the device runs this one
+        if prev is not None:
+            self._materialize(prev)
+        self.tick += k
+        return True
+
+    def _dispatch_device_step(self, modes_k: np.ndarray) -> _cf.Future:
+        """Enqueue one fused decode window on the pipeline worker. The
+        closure chains on the previous window's future (single worker =
+        FIFO, so ``prev.result()`` never blocks the worker on unfinished
+        work); the main thread returns immediately and keeps doing host
+        bookkeeping while XLA executes."""
+        prev, cur = self._future, (self.cur_tokens, self.pool.states,
+                                   self._positions)
+        modes_dev = jnp.asarray(modes_k)
+        params, stacked = self.params, self.stacked_bank
+        mixed, mono = self._mixed_step_dev, self._mono_step_dev
+
+        def work():
+            tok, states, positions = prev.result()[:3] if prev is not None \
+                else cur
+            if mixed is not None:
+                return mixed(params, stacked, tok, states, positions,
+                             modes_dev)
+            return mono(params, tok, states, positions, modes_dev)
+
+        fut = _pipeline().submit(work)
+        self._future = fut
+        return fut
+
+    def _sync_device_state(self):
+        """Land the last dispatched window's buffers back on the engine.
+        Must run before anything reads (or scatters into) ``pool.states``,
+        ``cur_tokens``, or ``_positions`` — admission, warm/reset, end of
+        run — because while a window is in flight those attributes point at
+        stale (donated) buffers."""
+        if self._future is not None:
+            self.cur_tokens, self.pool.states, self._positions = \
+                self._future.result()[:3]
+            self._future = None
+
+    def _materialize(self, inflight):
+        """Host side of the lagged pipeline: copy one window's [K, B]
+        int32 token block off the device and append it to the snapshot's
+        sessions; sessions whose budget completed in that window move to
+        ``finished`` here (their slots were already freed at dispatch)."""
+        snapshot, fut, k = inflight
+        arr = np.asarray(fut.result()[3])            # [K, B, ...]
+        for slot, sess in snapshot:
+            for i in range(k):
+                tok = arr[i, slot]
+                sess.tokens.append(int(tok.reshape(-1)[0]) if tok.ndim
+                                   else int(tok))
+            budget = sess.gen_budget or sess.request.max_new_tokens
+            if len(sess.tokens) >= budget:
+                self.finished.append(sess)
+
+    def _materialize_inflight(self):
+        if self._inflight is not None:
+            prev, self._inflight = self._inflight, None
+            self._materialize(prev)
+
     def warm(self, prompt: np.ndarray, gen: int = 2):
         """Trace every compiled path a measured run can hit — decode plus
-        each power-of-two prefill batch bucket up to the slot pool — then
-        zero the counters. ``prompt`` should have the measured run's prompt
-        length so the same length bucket compiles."""
+        each power-of-two prefill batch bucket up to the slot pool, and (on
+        the device loop) each power-of-two decode-window length up to
+        ``max_window`` — then zero the counters. ``prompt`` should have the
+        measured run's prompt length so the same length bucket compiles."""
         k = 1
         while True:
             n = min(k, self.pool.n_slots)
@@ -477,11 +773,21 @@ class ContinuousBatchingEngine:
             if k >= self.pool.n_slots:
                 break
             k <<= 1
+        if not self.host_loop:
+            w = 2
+            while w <= self.max_window:
+                # budget w+1 = prefill token + exactly one window of w ticks
+                self.run([Request(rid=-1 - i, prompt=np.asarray(prompt),
+                                  max_new_tokens=w + 1)
+                          for i in range(self.pool.n_slots)])
+                w <<= 1
         self.reset_counters()
 
     def reset_counters(self):
         """Zero every aggregate stat (after a warm-up run) while keeping the
         compiled paths, pool state, and orchestrator calibration."""
+        self._materialize_inflight()
+        self._sync_device_state()
         self.finished.clear()
         self.tick = 0
         self.decode_ticks = self.mode_mix_ticks = 0
@@ -499,6 +805,8 @@ class ContinuousBatchingEngine:
         for _ in range(max_ticks):
             if not self.step():
                 break
+        self._materialize_inflight()   # tick-budget exhaustion: don't drop
+        self._sync_device_state()      # the last dispatched tick's tokens
         return self.finished
 
     # -- aggregate stats ------------------------------------------------------

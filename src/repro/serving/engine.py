@@ -70,6 +70,7 @@ class ServingEngine:
         self.states = T.init_decode_state(cfg, batch, cache_len)
         self.pos = 0
         self._steps: Dict[Optional[int], Callable] = {}
+        self._tok_steps: Dict[Optional[int], Callable] = {}
         self._prefill_fn: Optional[Callable] = None
         self.stats = GenStats()
 
@@ -77,6 +78,27 @@ class ServingEngine:
         if mode not in self._steps:
             self._steps[mode] = make_serve_step(self.cfg, mode=mode)
         return self._steps[mode]
+
+    def _tok_step(self, mode: Optional[int]):
+        """Jitted decode step with the argmax fused in, so only int32
+        tokens ever cross the host boundary (and the per-mode split step is
+        actually compiled instead of retraced eagerly every token)."""
+        if mode not in self._tok_steps:
+            cfg = self.cfg
+
+            if mode is None:
+                @jax.jit
+                def step(params, tok, states, pos):
+                    logits, st = T.decode_step(params, tok, states, pos, cfg)
+                    return jnp.argmax(logits, -1).astype(jnp.int32), st
+            else:
+                @jax.jit
+                def step(params, tok, states, pos):
+                    logits, st, _ = SP.split_decode_step(
+                        params, tok, states, pos, cfg, mode=mode)
+                    return jnp.argmax(logits, -1).astype(jnp.int32), st
+            self._tok_steps[mode] = step
+        return self._tok_steps[mode]
 
     def reset(self):
         self.states = T.init_decode_state(self.cfg, self.batch,
@@ -127,6 +149,7 @@ class ServingEngine:
             raise ValueError(
                 f"{n_steps} decode steps from pos {self.pos} exceed the "
                 f"cache ({self.cache_len}) on a full-attention arch")
+        from repro.core import bottleneck
         tok = first_token
         out: List[np.ndarray] = []
         for _ in range(n_steps):
@@ -135,17 +158,15 @@ class ServingEngine:
                 if capacity_bps_fn is not None:
                     self.orch.observe_capacity(capacity_bps_fn())
                 mode = self.orch.choose_mode()
-            logits, states, pb = (
-                SP.split_decode_step(self.params, tok, self.states,
-                                     jnp.int32(self.pos), self.cfg,
-                                     mode=mode)
-                if mode is not None else
-                (*self._step(None)(self.params, tok, self.states,
-                                   jnp.int32(self.pos)), 0))
-            self.states = states
+            # argmax is fused into the jitted step (only int32 tokens cross
+            # the host boundary); wire bytes are host-side static accounting
+            nxt, self.states = self._tok_step(mode)(
+                self.params, tok, self.states, jnp.int32(self.pos))
+            pb = (bottleneck.mode_payload_bytes(
+                self.cfg, int(np.shape(tok)[0]), 1, mode)
+                if mode is not None else 0)
             self.pos += 1
-            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-            tok = nxt if not greedy else nxt
+            tok = nxt
             out.append(np.asarray(nxt))
             self.stats.tokens += int(nxt.size)
             self.stats.wire_bytes += int(pb)

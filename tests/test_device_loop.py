@@ -1,0 +1,116 @@
+"""Device-resident decode loop vs the legacy host loop.
+
+The continuous-batching engine's default tick keeps tokens and positions on
+device (argmax + feedback + position increment fused into the jitted step,
+pool state donated) and materializes each tick's token values one tick
+late, overlapping the host sync with the next tick's device compute.
+``host_loop=True`` preserves the pre-device-loop engine verbatim; these
+tests pin the two loops token-identical — same decoded streams, same mode
+decisions, same wire accounting, same tick counts — across every decode
+state family (attention KV, Griffin rglru + rolling window, xLSTM).
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.core import bottleneck as BN
+from repro.core import split as SP
+from repro.core.channel import ChannelConfig, channel_fleet
+from repro.core.orchestrator import (AppRequirement, ModeProfile,
+                                     Orchestrator)
+from repro.serving import ContinuousBatchingEngine, Request
+
+ARCHS = ["qwen2.5-3b", "recurrentgemma-2b", "xlstm-125m"]
+
+
+def _requests(cfg, n, *, seed=3, gen_lo=2, gen_hi=8):
+    chans = channel_fleet(
+        n, ChannelConfig(mean_mbps=8.0, std_mbps=3.0, blockage_prob=0.08,
+                         recovery_prob=0.15),
+        seed=11, mean_spread=0.95)
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i,
+                    prompt=rng.integers(1, cfg.vocab_size,
+                                        size=4).astype(np.int32),
+                    max_new_tokens=int(rng.integers(gen_lo, gen_hi)),
+                    channel=chans[i], arrival_tick=i // 2)
+            for i in range(n)]
+
+
+def _orch(cfg):
+    return Orchestrator(
+        [ModeProfile(m, BN.mode_payload_bytes(cfg, 1, 1, m), float(m))
+         for m in range(cfg.split.n_modes)],
+        AppRequirement(latency_budget_s=0.006), ema=0.5, hysteresis=1.0)
+
+
+def _run(params, cfg, host_loop: bool):
+    eng = ContinuousBatchingEngine(params, cfg, n_slots=3, cache_len=32,
+                                   orchestrator=_orch(cfg),
+                                   host_loop=host_loop)
+    done = eng.run(_requests(cfg, 10))
+    st = eng.stats()
+    assert eng.pool.n_free == eng.pool.n_slots
+    return done, st
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_device_loop_token_identical_to_host_loop(arch):
+    """Same requests, same channels: the device-resident loop must decode
+    the exact token stream the host loop decodes, per request — and make
+    the same per-tick mode decisions with the same wire/transfer
+    accounting (retirement is budget-driven, so the one-tick-lagged value
+    sync may not change any lifecycle decision)."""
+    cfg = get_reduced(arch)
+    params = SP.init_split_params(jax.random.PRNGKey(0), cfg)
+    host_done, host_st = _run(params, cfg, host_loop=True)
+    dev_done, dev_st = _run(params, cfg, host_loop=False)
+
+    host = {s.request.rid: s for s in host_done}
+    dev = {s.request.rid: s for s in dev_done}
+    assert host.keys() == dev.keys() and len(host) == 10
+    for rid in host:
+        assert host[rid].tokens == dev[rid].tokens, rid
+        assert host[rid].mode_counts == dev[rid].mode_counts, rid
+        assert host[rid].wire_bytes == dev[rid].wire_bytes, rid
+        assert host[rid].admitted_tick == dev[rid].admitted_tick, rid
+        assert host[rid].finished_tick == dev[rid].finished_tick, rid
+    for k in ["decode_ticks", "mixed_mode_ticks", "wire_bytes",
+              "prefill_calls", "mode_counts", "generated_tokens",
+              "mode_switches", "deadline_misses"]:
+        assert host_st[k] == dev_st[k], k
+
+
+def test_device_loop_budget_one_and_tick_exhaustion():
+    """Edge cases of the lagged pipeline: budget-1 sessions complete inside
+    their own prefill (never entering the decode pipeline), and a
+    tick-budget-exhausted ``run`` still materializes the final dispatched
+    tick's tokens instead of dropping them."""
+    cfg = get_reduced("qwen2.5-3b")
+    params = SP.init_split_params(jax.random.PRNGKey(0), cfg)
+    eng = ContinuousBatchingEngine(params, cfg, n_slots=2, cache_len=32,
+                                   orchestrator=_orch(cfg))
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i, prompt=rng.integers(1, cfg.vocab_size,
+                                               size=3).astype(np.int32),
+                    max_new_tokens=1) for i in range(3)]
+    done = eng.run(reqs)
+    assert len(done) == 3
+    assert all(len(s.tokens) == 1 for s in done)
+
+    eng2 = ContinuousBatchingEngine(params, cfg, n_slots=2, cache_len=64,
+                                    orchestrator=_orch(cfg), max_window=4)
+    reqs2 = [Request(rid=i, prompt=rng.integers(1, cfg.vocab_size,
+                                                size=3).astype(np.int32),
+                     max_new_tokens=20) for i in range(2)]
+    for r in reqs2:
+        eng2.submit(r)
+    for _ in range(3):                   # 3 steps = 3 windows of 4 ticks
+        eng2.step()
+    # every dispatched tick's tokens must be visible after the flush —
+    # sessions must still be mid-flight, or these assertions are vacuous
+    eng2._materialize_inflight()
+    assert len(eng2.active) == 2
+    for s in eng2.active.values():
+        assert len(s.tokens) == 1 + 3 * 4   # prefill + 3 four-tick windows

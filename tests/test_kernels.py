@@ -71,6 +71,155 @@ def test_rglru_scan_carry_across_time_blocks():
     assert float(h[0, 257, 0]) == pytest.approx(0.999 ** 257, rel=1e-3)
 
 
+@pytest.mark.parametrize("bits", [8, 4, 1])
+def test_bottleneck_quant_agrees_with_quant_module(bits):
+    """The fused kernel (and its oracle) must produce the SAME wire format
+    as ``repro.core.quant`` for every calibrated bit width — including the
+    bits=1 ternary code, which divided by a zero qmax before the floor fix
+    (inf scales -> NaN payloads)."""
+    from repro.core import quant
+    x = jax.random.normal(KEY, (128, 512))
+    w = 0.02 * jax.random.normal(jax.random.PRNGKey(7), (512, 128))
+    z = x @ w
+    q_codes, q_scales = quant.quantize(z, bits)
+    k_codes, k_scales = bottleneck_quant(x, w, bits=bits, block_m=128,
+                                         block_k=512, interpret=True)
+    r_codes, r_scales = ref.bottleneck_quant_ref(x, w, bits)
+    for codes, scales in [(k_codes, k_scales), (r_codes, r_scales)]:
+        assert np.isfinite(np.asarray(scales)).all()
+        np.testing.assert_allclose(np.asarray(scales),
+                                   np.asarray(q_scales), rtol=1e-5)
+        diff = np.abs(np.asarray(codes, np.int32)
+                      - np.asarray(q_codes, np.int32))
+        assert diff.max() <= 1           # round() ties may break either way
+        assert (diff > 0).mean() < 0.01
+        assert np.abs(np.asarray(codes)).max() <= quant.qmax(bits)
+
+
+# ---------------------------------------------------------------------------
+# fused mixed-mode boundary kernel (kernels/boundary_mixed.py)
+# ---------------------------------------------------------------------------
+
+from repro.kernels.boundary_mixed import boundary_mixed_grouped  # noqa: E402
+
+
+def _stacked_bank(widths_bits, d=128, seed=0, dtype=jnp.bfloat16):
+    """A synthetic stacked mode bank (same pytree as bottleneck.bank_stack
+    produces) with the given [(width, bits)] heads."""
+    wmax = max(w for w, _ in widths_bits)
+    keys = jax.random.split(jax.random.PRNGKey(seed), 2 * len(widths_bits))
+    downs, ups = [], []
+    for i, (w, _) in enumerate(widths_bits):
+        dw = 0.05 * jax.random.normal(keys[2 * i], (d, w))
+        uw = 0.05 * jax.random.normal(keys[2 * i + 1], (w, d))
+        downs.append(jnp.pad(dw, ((0, 0), (0, wmax - w))).astype(dtype))
+        ups.append(jnp.pad(uw, ((0, wmax - w), (0, 0))).astype(dtype))
+    return {
+        "down_w": jnp.stack(downs),
+        "up_w": jnp.stack(ups),
+        "norm_scale": jnp.ones((len(widths_bits), d), dtype),
+        "width": jnp.asarray([w for w, _ in widths_bits], jnp.int32),
+        "bits": jnp.asarray([b for _, b in widths_bits], jnp.int32),
+    }
+
+
+# widths cover full-wmax, narrow (fewer chunks than wmax), and a
+# non-chunk-aligned width (masked last chunk); bits cover int8 / int4 /
+# ternary / unquantized
+HET_BANK = [(128, 8), (256, 4), (200, 1), (384, 0)]
+
+
+def _grouped_parity(stacked, x, modes):
+    """Run the Pallas kernel (interpret) and the blocked jnp oracle on the
+    SAME mode-grouped layout and return both plus the serving reference."""
+    B, S, d = x.shape
+    block_r = 16 if jnp.dtype(x.dtype).itemsize == 2 else 8
+    rmode = jnp.repeat(jnp.asarray(modes, jnp.int32), S)
+    dest, tb = ops.group_layout(stacked, rmode, block_r, 128)
+    xp = jnp.zeros((tb["P"], d), x.dtype).at[dest].set(x.reshape(B * S, d))
+    yk = boundary_mixed_grouped(
+        xp, stacked["down_w"], stacked["up_w"], stacked["norm_scale"],
+        tb["hid"], tb["nchunk"], tb["width"], tb["bits"],
+        block_r=block_r, block_w=128, interpret=True)
+    yo = ref.boundary_mixed_grouped_ref(
+        xp, stacked["down_w"], stacked["up_w"], stacked["norm_scale"],
+        np.asarray(tb["hid"]), np.asarray(tb["nchunk"]),
+        np.asarray(tb["width"]), np.asarray(tb["bits"]),
+        block_r=block_r, block_w=128)
+    return yk, yo
+
+
+@pytest.mark.parametrize("mode", [0, 1, 2, 3, 4])
+def test_boundary_kernel_bitwise_every_calibrated_mode(mode):
+    """Uniform-mode batches: the Pallas kernel must match the blocked jnp
+    oracle BIT FOR BIT for every calibrated mode — bits 8, 4, the ternary
+    bits=1 code, the unquantized bits=0 wire, and the raw mode-0
+    passthrough."""
+    stacked = _stacked_bank(HET_BANK)
+    x = jax.random.normal(jax.random.PRNGKey(9), (8, 1, 128)
+                          ).astype(jnp.bfloat16)
+    modes = jnp.full((8,), mode, jnp.int32)
+    yk, yo = _grouped_parity(stacked, x, modes)
+    np.testing.assert_array_equal(np.asarray(yk, np.float32),
+                                  np.asarray(yo, np.float32))
+    # and the dispatcher output must agree with the serving jnp reference
+    y_op = ops.boundary_mixed_op(stacked, x, modes, interpret=True)
+    y_ref = ref.boundary_mixed_ref(stacked, x, modes)
+    np.testing.assert_allclose(np.asarray(y_op, np.float32),
+                               np.asarray(y_ref, np.float32),
+                               atol=2e-2, rtol=2e-2)
+
+
+@pytest.mark.parametrize("B", [1, 8, 32])
+def test_boundary_kernel_heterogeneous_pool_sizes(B):
+    """Mixed-mode pools (every slot on its own head) at pool sizes 1/8/32:
+    bit-for-bit vs the blocked oracle, tight agreement vs the serving
+    reference, and exact passthrough for raw-mode rows."""
+    stacked = _stacked_bank(HET_BANK)
+    rng = np.random.default_rng(B)
+    x = jnp.asarray(rng.normal(size=(B, 1, 128)), jnp.bfloat16)
+    modes = jnp.asarray(rng.integers(0, 5, B), jnp.int32)
+    yk, yo = _grouped_parity(stacked, x, modes)
+    np.testing.assert_array_equal(np.asarray(yk, np.float32),
+                                  np.asarray(yo, np.float32))
+    y_op = np.asarray(ops.boundary_mixed_op(stacked, x, modes,
+                                            interpret=True), np.float32)
+    y_ref = np.asarray(ref.boundary_mixed_ref(stacked, x, modes), np.float32)
+    np.testing.assert_allclose(y_op, y_ref, atol=2e-2, rtol=2e-2)
+    raw = np.asarray(modes) == 0
+    np.testing.assert_array_equal(y_op[raw], np.asarray(x, np.float32)[raw])
+
+
+def test_boundary_kernel_prefill_rows():
+    """[B, S, d] prefill-shaped inputs (S > 1): every token row of a batch
+    row rides that row's mode; parity must hold with per-token grouping."""
+    stacked = _stacked_bank(HET_BANK)
+    rng = np.random.default_rng(5)
+    B, S = 5, 3
+    x = jnp.asarray(rng.normal(size=(B, S, 128)), jnp.bfloat16)
+    modes = jnp.asarray(rng.integers(0, 5, B), jnp.int32)
+    yk, yo = _grouped_parity(stacked, x, modes)
+    np.testing.assert_array_equal(np.asarray(yk, np.float32),
+                                  np.asarray(yo, np.float32))
+    y_op = np.asarray(ops.boundary_mixed_op(stacked, x, modes,
+                                            interpret=True), np.float32)
+    y_ref = np.asarray(ref.boundary_mixed_ref(stacked, x, modes), np.float32)
+    np.testing.assert_allclose(y_op, y_ref, atol=2e-2, rtol=2e-2)
+
+
+def test_boundary_dispatcher_unaligned_widths_fall_back():
+    """A bank whose widest head is not 128-aligned cannot tile the kernel;
+    the dispatcher must route to the jnp reference and agree EXACTLY."""
+    stacked = _stacked_bank([(32, 8), (48, 4), (24, 1)])   # wmax = 48
+    rng = np.random.default_rng(6)
+    x = jnp.asarray(rng.normal(size=(6, 1, 128)), jnp.bfloat16)
+    modes = jnp.asarray(rng.integers(0, 4, 6), jnp.int32)
+    y_op = ops.boundary_mixed_op(stacked, x, modes, interpret=True)
+    y_ref = ref.boundary_mixed_ref(stacked, x, modes)
+    np.testing.assert_array_equal(np.asarray(y_op, np.float32),
+                                  np.asarray(y_ref, np.float32))
+
+
 def test_ops_fallback_on_odd_shapes():
     """Non-tileable shapes must route to the reference implementation."""
     x = jax.random.normal(KEY, (13, 100))

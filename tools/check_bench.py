@@ -1,0 +1,101 @@
+"""CI gate over the serving benchmark artifact (stdlib only).
+
+    python tools/check_bench.py NEW.json [BASELINE.json]
+
+Asserts, against the fresh ``bench_serving.py --json`` output:
+
+1. ``channel_trace.adaptive_wins`` — the in-flight adaptive controller must
+   use <= decode wire bytes/token at an equal-or-better deadline-miss rate
+   than admission-frozen modes (the paper's dynamic-adaptation claim);
+2. ``engine_comparison.decode_speedup`` — the device-resident decode loop
+   must beat the legacy host loop by at least ``MIN_LOOP_SPEEDUP`` (a
+   machine-independent in-run ratio: both loops run on the same box in the
+   same process);
+3. decode tokens/s must not regress below ``BENCH_TOLERANCE`` x the
+   committed baseline (matched per offered-load level, plus the
+   device-loop figure). The tolerance is deliberately loose — CI runners
+   vary widely in absolute speed; the in-run ratio above is the sharp
+   check — and the committed baseline should be refreshed by any PR that
+   intentionally moves serving performance.
+
+Environment overrides: ``MIN_LOOP_SPEEDUP`` (default 1.15),
+``BENCH_TOLERANCE`` (default 0.3).
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+
+def check(new: dict, baseline: dict | None) -> list:
+    failures = []
+    min_speedup = float(os.environ.get("MIN_LOOP_SPEEDUP", "1.15"))
+    tolerance = float(os.environ.get("BENCH_TOLERANCE", "0.3"))
+
+    tr = new.get("channel_trace")
+    if tr is None:
+        # a silently-missing trace must not un-gate the paper's headline
+        # adaptive-vs-frozen claim — CI always passes --channel-trace
+        failures.append("channel_trace missing from the bench artifact")
+    elif not tr.get("adaptive_wins"):
+        failures.append(
+            "adaptive controller must use <= wire bytes/token at an "
+            "equal-or-better deadline-miss rate than admission-frozen "
+            f"modes: {tr.get('adaptive')} vs {tr.get('frozen')}")
+
+    ec = new.get("engine_comparison")
+    if ec is None:
+        failures.append("engine_comparison missing from the bench artifact")
+    elif ec["decode_speedup"] < min_speedup:
+        failures.append(
+            f"device-resident decode loop speedup {ec['decode_speedup']}x "
+            f"fell below the {min_speedup}x floor "
+            f"(device {ec['device_loop']['decode_tok_per_s']} vs host "
+            f"{ec['host_loop']['decode_tok_per_s']} tok/s)")
+
+    if baseline is not None:
+        base_levels = {l["offered_load_req_per_tick"]: l
+                       for l in baseline.get("levels", [])}
+        for lvl in new.get("levels", []):
+            base = base_levels.get(lvl["offered_load_req_per_tick"])
+            if base is None:
+                continue
+            floor = tolerance * base["decode_tok_per_s"]
+            if lvl["decode_tok_per_s"] < floor:
+                failures.append(
+                    f"load {lvl['offered_load_req_per_tick']}: decode "
+                    f"{lvl['decode_tok_per_s']} tok/s regressed below "
+                    f"{floor:.1f} ({tolerance} x baseline "
+                    f"{base['decode_tok_per_s']})")
+        bec = baseline.get("engine_comparison")
+        if ec is not None and bec is not None:
+            floor = tolerance * bec["device_loop"]["decode_tok_per_s"]
+            if ec["device_loop"]["decode_tok_per_s"] < floor:
+                failures.append(
+                    f"device-loop decode {ec['device_loop']['decode_tok_per_s']} "
+                    f"tok/s regressed below {floor:.1f} ({tolerance} x "
+                    f"baseline {bec['device_loop']['decode_tok_per_s']})")
+    return failures
+
+
+def main(argv) -> int:
+    new = json.load(open(argv[1]))
+    baseline = json.load(open(argv[2])) if len(argv) > 2 else None
+    failures = check(new, baseline)
+    summary = {
+        "engine_comparison": new.get("engine_comparison"),
+        "levels": [{k: l[k] for k in ("offered_load_req_per_tick",
+                                      "decode_tok_per_s")}
+                   for l in new.get("levels", [])],
+        "adaptive_wins": (new.get("channel_trace") or {}).get(
+            "adaptive_wins"),
+    }
+    print(json.dumps(summary, indent=1))
+    for f in failures:
+        print(f"BENCH CHECK FAILED: {f}", file=sys.stderr)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv))
