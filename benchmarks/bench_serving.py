@@ -45,11 +45,9 @@ from repro.core import bottleneck as BN
 from repro.core import split as SP
 from repro.core.channel import (RTT_SECONDS, ChannelConfig, TraceChannel,
                                 channel_fleet)
-from repro.core.orchestrator import (AppRequirement, ModeProfile,
-                                     Orchestrator)
 from repro.models import transformer as T
 from repro.serving import (ContinuousBatchingEngine, ControllerConfig,
-                           ModeController, Request)
+                           ModeController, Request, default_orchestrator)
 
 
 def make_requests(cfg, n: int, *, prompt_len: int, gen: int,
@@ -73,13 +71,10 @@ def make_requests(cfg, n: int, *, prompt_len: int, gen: int,
 def run_level(params, cfg, *, n_requests: int, arrival_every: int,
               n_slots: int, prompt_len: int, gen: int,
               host_loop: bool = False) -> dict:
-    orch = Orchestrator(
-        [ModeProfile(m, BN.mode_payload_bytes(cfg, 1, 1, m), float(m))
-         for m in range(cfg.split.n_modes)],
-        AppRequirement(latency_budget_s=0.006), ema=0.5, hysteresis=1.0)
     eng = ContinuousBatchingEngine(params, cfg, n_slots=n_slots,
                                    cache_len=max(64, prompt_len + gen + 8),
-                                   orchestrator=orch, host_loop=host_loop)
+                                   orchestrator=default_orchestrator(cfg),
+                                   host_loop=host_loop)
     reqs = make_requests(cfg, n_requests, prompt_len=prompt_len, gen=gen,
                          arrival_every=arrival_every)
     # warm every compiled path the measured run can hit (decode + each
@@ -91,6 +86,7 @@ def run_level(params, cfg, *, n_requests: int, arrival_every: int,
     done = eng.run(reqs)
     wall = time.time() - t0
     st = eng.stats()
+    eng.close()
     occupancy = st["decode_tokens"] / max(st["decode_ticks"] * n_slots, 1)
     return {
         "offered_load_req_per_tick": round(1.0 / arrival_every, 3),
@@ -131,14 +127,10 @@ def compare_engine_loops(params, cfg, *, n_slots: int, prompt_len: int,
     best repeat, so machine-load drift hits both engines symmetrically."""
     engines = {}
     for key, host_loop in [("host_loop", True), ("device_loop", False)]:
-        orch = Orchestrator(
-            [ModeProfile(m, BN.mode_payload_bytes(cfg, 1, 1, m), float(m))
-             for m in range(cfg.split.n_modes)],
-            AppRequirement(latency_budget_s=0.006), ema=0.5, hysteresis=1.0)
         eng = ContinuousBatchingEngine(
             params, cfg, n_slots=n_slots,
-            cache_len=max(64, prompt_len + gen + 8), orchestrator=orch,
-            host_loop=host_loop)
+            cache_len=max(64, prompt_len + gen + 8),
+            orchestrator=default_orchestrator(cfg), host_loop=host_loop)
         # decode-dominated workload: every request present at tick 0 with
         # short prompts and a long generation, so wall clock measures the
         # per-tick loop, not admission
@@ -164,6 +156,8 @@ def compare_engine_loops(params, cfg, *, n_slots: int, prompt_len: int,
                         st["decode_tokens"]
                         / max(st["decode_ticks"] * n_slots, 1), 3),
                 }
+    for eng in engines.values():
+        eng.close()
     out["n_slots"] = n_slots
     out["gen"] = gen
     out["requests"] = n_requests
@@ -218,10 +212,7 @@ def run_channel_trace(params, cfg, kind: str, *, n_slots: int, gen: int,
                for _ in range(n_slots)]
 
     def run(policy: str) -> dict:
-        orch = Orchestrator(
-            [ModeProfile(m, pay[m], float(m)) for m in pay],
-            AppRequirement(latency_budget_s=latency_budget_s),
-            ema=0.5, hysteresis=0.9)
+        orch = default_orchestrator(cfg, latency_budget_s, hysteresis=0.9)
         kw = ({"controller": ModeController(orch,
                                             ControllerConfig(dwell_ticks=2))}
               if policy == "adaptive"
@@ -237,6 +228,7 @@ def run_channel_trace(params, cfg, kind: str, *, n_slots: int, gen: int,
         eng.warm(prompts[0], gen=2)
         done = eng.run(reqs)
         st = eng.stats()
+        eng.close()
         assert len(done) == n_slots
         return {
             "decode_wire_bytes_per_token": round(

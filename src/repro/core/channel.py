@@ -112,6 +112,108 @@ class TraceChannel(Channel):
         return float(self.capacities[i])
 
 
+class MobilityChannel(Channel):
+    """A UE that moves *between cells* while its session is live.
+
+    ``cells`` scripts which physical cell the UE sits in at each channel
+    tick (hold-last after the script ends, or cycle); ``cell_caps_bps``
+    gives each cell's uplink capacity when the UE is served *by that cell's
+    edge replica*. The serving side is explicit: :class:`EdgeCluster` (or
+    any caller) sets :attr:`serving_cell` at admission and again when a
+    migration lands. Whenever the UE's physical cell differs from its
+    serving cell — it crossed a cell boundary but its session still lives
+    on the old edge server — the returned capacity is multiplied by
+    ``detach_factor`` (inter-cell backhaul detour / degraded beam), which
+    is exactly the "stay-and-degrade" cost a handover policy weighs against
+    migrating the decode state.
+
+    Crossings are *events*: ``step()`` records each boundary crossing in
+    ``handover_ticks`` and leaves the new cell id in ``pending_handover``
+    until the serving side acknowledges it (``ack_handover``). Handover
+    latency is measured in channel ticks: crossing tick -> the tick at
+    which ``serving_cell`` matches the physical cell again
+    (``handover_latencies``).
+
+    Deterministic by construction, like :class:`TraceChannel` — both sides
+    of a migrate-vs-stay A/B replay the identical cell-crossing script.
+    """
+
+    def __init__(self, cells: Sequence[int], cell_caps_bps: Sequence[float],
+                 *, detach_factor: float = 0.05, cycle: bool = False,
+                 cfg: Optional[ChannelConfig] = None):
+        super().__init__(cfg)
+        self.cells = np.asarray(cells, np.int64)
+        if self.cells.size == 0:
+            raise ValueError("MobilityChannel needs a non-empty cell script")
+        self.cell_caps = np.asarray(cell_caps_bps, np.float64)
+        if int(self.cells.max()) >= self.cell_caps.size:
+            raise ValueError("cell script references a cell with no capacity")
+        self.detach_factor = float(detach_factor)
+        self.cycle = cycle
+        self._i = 0
+        self.serving_cell: Optional[int] = None
+        self.pending_handover: Optional[int] = None
+        self.handover_ticks: list = []       # channel tick of each crossing
+        self.handover_latencies: list = []   # ticks from crossing to re-home
+        self._crossed_at: Optional[int] = None
+
+    def _cell_at(self, i: int) -> int:
+        n = self.cells.size
+        return int(self.cells[i % n if self.cycle else min(i, n - 1)])
+
+    @property
+    def current_cell(self) -> int:
+        """The UE's physical cell at the *next* tick (no state advance) —
+        what a placement policy should route against."""
+        return self._cell_at(self._i)
+
+    @property
+    def last_cell(self) -> int:
+        """The physical cell of the most recently *stepped* tick (falls
+        back to the script's first cell before any step)."""
+        return self._cell_at(max(self._i - 1, 0))
+
+    @property
+    def detached(self) -> bool:
+        """True when the UE has started transmitting and its last-stepped
+        physical cell differs from its serving cell — it is paying
+        ``detach_factor`` regardless of whether a crossing *event* is
+        still pending (a session placed off-cell at admission is detached
+        without ever having crossed)."""
+        return (self._i > 0 and self.serving_cell is not None
+                and self.last_cell != self.serving_cell)
+
+    def ack_handover(self, serving_cell: int):
+        """The serving side re-homed this session (migration landed, or a
+        drop-and-replay re-admitted it). Clears the pending event and logs
+        the handover latency if the new home matches the physical cell."""
+        self.serving_cell = serving_cell
+        self.pending_handover = None
+        if self._crossed_at is not None and serving_cell == self.last_cell:
+            self.handover_latencies.append(self._i - self._crossed_at)
+            self._crossed_at = None
+
+    def step(self) -> float:
+        """Advance one tick: move the UE along its cell script, flag a
+        boundary crossing, and return the capacity the *current serving
+        arrangement* delivers (mutates ``self`` like ``Channel.step``)."""
+        prev = self._cell_at(max(self._i - 1, 0)) if self._i else None
+        cell = self._cell_at(self._i)
+        if self.serving_cell is None:        # un-homed: assume co-located
+            self.serving_cell = cell
+        if prev is not None and cell != prev:
+            self.pending_handover = cell
+            self.handover_ticks.append(self._i)
+            if self._crossed_at is None:
+                self._crossed_at = self._i
+        self._i += 1
+        self.t += self.cfg.tick_seconds
+        cap = float(self.cell_caps[cell])
+        if cell != self.serving_cell:
+            cap = max(cap * self.detach_factor, 1.0)
+        return cap
+
+
 def channel_fleet(n: int, cfg: Optional[ChannelConfig] = None, *,
                   seed: int = 0, mean_spread: float = 0.5) -> list:
     """``n`` independent per-user links for continuous-batching serving.

@@ -28,7 +28,7 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass, field
-from typing import Dict, Hashable, List, Optional, Sequence
+from typing import Dict, Hashable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -99,6 +99,23 @@ class Orchestrator:
     def release(self, rid: Hashable) -> None:
         self._links.pop(rid, None)
         self._reqs.pop(rid, None)
+
+    def detach(self, rid: Hashable) -> Tuple[Optional[LinkState],
+                                             Optional[AppRequirement]]:
+        """Remove and RETURN a link's orchestration state instead of
+        discarding it — the live-migration export: the capacity EWMA and
+        requirement travel with the session to another orchestrator's
+        :meth:`attach` so mode selection continues across the handover."""
+        return self._links.pop(rid, None), self._reqs.pop(rid, None)
+
+    def attach(self, rid: Hashable, link: Optional[LinkState],
+               requirement: Optional[AppRequirement] = None) -> None:
+        """Install a link state exported by :meth:`detach` (live-migration
+        import). A ``None`` link leaves any existing registration alone."""
+        if link is not None:
+            self._links[rid] = link
+        if requirement is not None:
+            self._reqs[rid] = requirement
 
     def _link(self, rid: Optional[Hashable]) -> LinkState:
         if rid is None:

@@ -8,6 +8,10 @@ paper's Fig. 3/5 loop, runnable end to end).
     # continuous batching: per-request channels, per-slot bottleneck modes
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b --reduced \
         --engine continuous --requests 16 --n-slots 4 --arrival-every 2
+    # edge cluster: N replicas, mobility traces, live migration on handover
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b --reduced \
+        --engine cluster --replicas 2 --placement best-channel \
+        --handover migrate --requests 8 --n-slots 2
 
 Policies (sync engine):
   orchestrator  paper's dynamic policy (channel + loss feedback, hysteresis)
@@ -27,12 +31,15 @@ import numpy as np
 from repro.configs import ARCH_IDS, get_config, get_reduced
 from repro.core import bottleneck
 from repro.core import split as SP
-from repro.core.channel import Channel, ChannelConfig, channel_fleet
+from repro.core.channel import (Channel, ChannelConfig, MobilityChannel,
+                                channel_fleet)
 from repro.core.orchestrator import AppRequirement, ModeProfile, Orchestrator
 from repro.data import tokens
 from repro.models import transformer as T
-from repro.serving import (ContinuousBatchingEngine, ControllerConfig,
-                           ModeController, Request, ServingEngine)
+from repro.serving import (HANDOVER_POLICIES, PLACEMENTS,
+                           ContinuousBatchingEngine, ControllerConfig,
+                           EdgeCluster, ModeController, Request,
+                           ServingEngine)
 from repro.training import checkpoint
 
 
@@ -86,6 +93,48 @@ def run_continuous(args, cfg, params):
     return {
         "engine": "continuous",
         "n_slots": args.n_slots,
+        "decode_tok_per_s": round(st["decode_tokens"] / max(wall, 1e-9), 1),
+        "per_request": [s.result() for s in done[:4]],
+        **st,
+    }
+
+
+def run_cluster(args, cfg, params):
+    """Multi-replica edge cluster on scripted mobility: each UE starts in
+    its home cell and crosses into the next cell partway through its
+    generation, so every session exercises the configured handover policy
+    (migrate / stay / drop) under the chosen placement."""
+    n_rep = args.replicas
+    cap_bps = args.mean_mbps * 1e6 / 8.0
+    rng = np.random.default_rng(args.channel_seed)
+    src = tokens.MarkovTokenSource(cfg, seed=7)
+    batch = src.batch(args.requests, args.prompt_len)["tokens"]
+    reqs = []
+    for i in range(args.requests):
+        home = i % n_rep
+        cross = int(rng.integers(2, max(args.gen - 2, 3)))
+        cells = [home] * cross + [(home + 1) % n_rep] * (args.gen + 8)
+        ch = MobilityChannel(cells, [cap_bps] * n_rep,
+                             detach_factor=args.detach_factor)
+        reqs.append(Request(rid=i, prompt=np.asarray(batch[i]),
+                            max_new_tokens=args.gen, channel=ch,
+                            arrival_tick=i * args.arrival_every))
+    cluster = EdgeCluster(
+        params, cfg, n_replicas=n_rep, n_slots=args.n_slots,
+        cache_len=args.cache_len, placement=args.placement,
+        handover=args.handover, snapshot_bits=args.snapshot_bits,
+        backhaul_bps=args.backhaul_mbps * 1e6 / 8.0,
+        latency_budget_s=args.latency_budget_ms / 1e3)
+    # warm every replica's compiled paths so decode_tok_per_s measures
+    # steady-state serving, same as the continuous-engine path
+    cluster.warm(np.asarray(batch[0]))
+    t0 = time.time()
+    done = cluster.run(reqs)
+    wall = time.time() - t0
+    st = cluster.stats()
+    cluster.close()
+    return {
+        "engine": "cluster",
         "decode_tok_per_s": round(st["decode_tokens"] / max(wall, 1e-9), 1),
         "per_request": [s.result() for s in done[:4]],
         **st,
@@ -155,7 +204,7 @@ def main(argv=None):
     ap.add_argument("--arch", required=True, choices=ARCH_IDS)
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--engine", default="sync",
-                    choices=["sync", "continuous"])
+                    choices=["sync", "continuous", "cluster"])
     ap.add_argument("--requests", type=int, default=4,
                     help="number of requests (sync: the batch size)")
     ap.add_argument("--prompt-len", type=int, default=16)
@@ -178,6 +227,24 @@ def main(argv=None):
                     help="adaptive policy: min ticks between mode switches")
     ap.add_argument("--mean-mbps", type=float, default=40.0,
                     help="continuous engine: fleet mean uplink")
+    ap.add_argument("--replicas", type=int, default=2,
+                    help="cluster engine: decoder replicas (one per cell)")
+    ap.add_argument("--placement", default="least-loaded",
+                    choices=list(PLACEMENTS),
+                    help="cluster engine: new-request routing policy")
+    ap.add_argument("--handover", default="migrate",
+                    choices=list(HANDOVER_POLICIES),
+                    help="cluster engine: what to do when a UE crosses "
+                         "cells mid-generation")
+    ap.add_argument("--snapshot-bits", type=int, default=0,
+                    help="cluster engine: quantize migration snapshots at "
+                         "this bit width (0 = raw, bit-exact)")
+    ap.add_argument("--backhaul-mbps", type=float, default=10000.0,
+                    help="cluster engine: inter-replica backhaul for "
+                         "migration snapshots")
+    ap.add_argument("--detach-factor", type=float, default=0.05,
+                    help="cluster engine: capacity multiplier while a UE "
+                         "is served from the wrong cell")
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--json-out", default=None)
     args = ap.parse_args(argv)
@@ -192,8 +259,9 @@ def main(argv=None):
         params = checkpoint.restore(args.ckpt, params)
         print(f"loaded weights from {args.ckpt}")
 
-    summary = (run_continuous if args.engine == "continuous"
-               else run_sync)(args, cfg, params)
+    runner = {"sync": run_sync, "continuous": run_continuous,
+              "cluster": run_cluster}[args.engine]
+    summary = runner(args, cfg, params)
     summary = {"arch": args.arch, **summary}
     print(json.dumps(summary, indent=1, default=str))
     if args.json_out:

@@ -9,15 +9,28 @@
 ``controller.ModeController`` — per-slot, per-tick in-flight mode
                                 re-selection (EWMA + dwell + deadline
                                 escalation) for the continuous engine.
+``cluster.EdgeCluster``       — N engine replicas (one per simulated cell)
+                                behind a router with pluggable placement
+                                policies and mmWave-handover handling.
+``migration``                 — live session migration: ``read_rows`` slot
+                                snapshots, optional wire quantization,
+                                bit-exact injection on the target replica.
 ``session``                   — request/queue/session lifecycle records.
 
-See docs/serving.md for the request lifecycle and slot-pool design, and
+See docs/serving.md for the request lifecycle and slot-pool design,
+docs/cluster.md for the multi-replica router and handover semantics, and
 docs/modes.md for the mode bank and the stats field reference.
 """
 from repro.serving.batcher import (ContinuousBatchingEngine,  # noqa: F401
                                    SlotPool)
+from repro.serving.cluster import (HANDOVER_POLICIES,  # noqa: F401
+                                   PLACEMENTS, EdgeCluster,
+                                   default_orchestrator)
 from repro.serving.controller import (ControllerConfig,  # noqa: F401
                                       ModeController, SlotControl)
 from repro.serving.engine import GenStats, ServingEngine  # noqa: F401
+from repro.serving.migration import (MigrationSnapshot,  # noqa: F401
+                                     detach_session, extract_session,
+                                     inject_session)
 from repro.serving.session import (Request, RequestQueue,  # noqa: F401
                                    Session)

@@ -46,6 +46,7 @@ from __future__ import annotations
 import concurrent.futures as _cf
 import functools
 import time
+import weakref
 from typing import Dict, List, Optional, Tuple
 
 import jax
@@ -68,22 +69,6 @@ def _slot_axis(cfg: ModelConfig) -> int:
     return 1 if cfg.homogeneous else 0
 
 
-# one shared pipeline worker: jitted decode steps execute here so the XLA
-# call (which releases the GIL) overlaps the main thread's per-tick
-# orchestrator / controller / channel bookkeeping. A single worker keeps
-# execution strictly FIFO — step t+1's closure reads step t's future, so
-# device-side ordering (and therefore every decoded token) is deterministic.
-_PIPELINE: Optional[_cf.ThreadPoolExecutor] = None
-
-
-def _pipeline() -> _cf.ThreadPoolExecutor:
-    global _PIPELINE
-    if _PIPELINE is None:
-        _PIPELINE = _cf.ThreadPoolExecutor(
-            max_workers=1, thread_name_prefix="decode-pipeline")
-    return _PIPELINE
-
-
 def _put_rows(pool_states, batch_states, slots, axis: int):
     """Scatter rows 0..len(slots)-1 of a batched prefill's state pytree into
     the pool slots (slots are distinct by construction) — the one shared
@@ -102,6 +87,17 @@ def _put_rows(pool_states, batch_states, slots, axis: int):
 def _scatter_rows(pool_states, batch_states, slots, axis: int):
     """Host-loop admission: state scatter in ONE dispatch."""
     return _put_rows(pool_states, batch_states, slots, axis)
+
+
+@functools.partial(jax.jit, static_argnums=(2,))
+def _gather_rows(pool_states, slots, axis: int):
+    """The inverse of ``_put_rows``: pull the given slots' rows out of the
+    pool as a batched state pytree (batch = ``len(slots)`` on the same
+    axis ``_put_rows``/``write_rows`` scatter on)."""
+    def take(p):
+        return jnp.moveaxis(jnp.moveaxis(p, axis, 0)[slots], 0, axis)
+
+    return jax.tree.map(take, pool_states)
 
 
 @functools.partial(jax.jit, static_argnums=(6,), donate_argnums=(0, 1))
@@ -139,6 +135,103 @@ def _group_by_bucket(admits):
     return groups
 
 
+class _EngineSteps:
+    """The jitted step/prefill callables one engine configuration needs."""
+
+    def __init__(self, mono_step, mono_step_dev, mono_prefill,
+                 mixed_step=None, mixed_step_dev=None, mixed_prefill=None):
+        self.mono_step = mono_step
+        self.mono_step_dev = mono_step_dev
+        self.mono_prefill = mono_prefill
+        self.mixed_step = mixed_step
+        self.mixed_step_dev = mixed_step_dev
+        self.mixed_prefill = mixed_prefill
+
+
+@functools.lru_cache(maxsize=None)
+def _compiled_steps(cfg: ModelConfig, cache_len: int,
+                    mixed: bool) -> _EngineSteps:
+    """Build (once per ``(cfg, cache_len)``) the jitted decode/prefill
+    closures every ``ContinuousBatchingEngine`` runs on. Cached at module
+    level so N engines of the same configuration — a cluster's replicas,
+    an A/B benchmark's paired engines — share ONE set of function objects
+    and therefore ONE XLA compile cache, instead of re-tracing per engine.
+    The closures are pure functions of their arguments (params ride in as
+    an argument), so sharing them across engines is sound; donation is a
+    per-call property and composes with sharing."""
+
+    @jax.jit
+    def mono_step(params, tok, states, pos):
+        return T.decode_step(params, tok, states, pos, cfg)
+
+    # device-resident decode window: a [K, B] mode matrix drives K
+    # whole ticks in ONE jitted lax.scan — argmax + token feedback +
+    # position increments all on device, slot-pool state and positions
+    # donated so XLA updates the resident pool in place instead of
+    # copying the whole KV/recurrent pool every tick. Mode choice and
+    # budget-based retirement depend only on channels and counts (never
+    # on token values), so the host precomputes the window and reads
+    # the [K, B] token block back one window late. Free slots ride
+    # along (their positions drift, but admission rewrites them).
+    @functools.partial(jax.jit, donate_argnums=(2, 3))
+    def mono_step_dev(params, tok, states, positions, modes_k):
+        def body(carry, _modes):
+            tok, states, positions = carry
+            logits, new_states = T.decode_step(params, tok, states,
+                                               positions, cfg)
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            nxt = nxt.reshape(tok.shape)
+            return (nxt, new_states, positions + 1), nxt
+
+        carry, toks = jax.lax.scan(body, (tok, states, positions),
+                                   modes_k)
+        return (*carry, toks)
+
+    @jax.jit
+    def mono_prefill(params, toks, lengths):
+        # fresh zero states materialize inside the jit (shapes are
+        # static per bucket) — no per-admission host allocation; the
+        # argmax rides inside the jit so only int32 tokens cross the
+        # host boundary
+        states = T.init_decode_state(cfg, toks.shape[0], cache_len)
+        logits, new_states = T.prefill(params, toks, cfg, states,
+                                       lengths=lengths)
+        return jnp.argmax(logits, -1).astype(jnp.int32), new_states
+
+    if not mixed:
+        return _EngineSteps(mono_step, mono_step_dev, mono_prefill)
+
+    @jax.jit
+    def mixed_step(params, stacked, tok, states, positions, modes):
+        return SP.split_decode_step_mixed(params, stacked, tok,
+                                          states, positions, cfg, modes)
+
+    @functools.partial(jax.jit, donate_argnums=(3, 4))
+    def mixed_step_dev(params, stacked, tok, states, positions, modes_k):
+        def body(carry, modes):
+            tok, states, positions = carry
+            logits, new_states = SP.split_decode_step_mixed(
+                params, stacked, tok, states, positions, cfg, modes)
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            nxt = nxt.reshape(tok.shape)
+            return (nxt, new_states, positions + 1), nxt
+
+        carry, toks = jax.lax.scan(body, (tok, states, positions),
+                                   modes_k)
+        return (*carry, toks)
+
+    @jax.jit
+    def mixed_prefill(params, stacked, toks, lengths, modes):
+        states = T.init_decode_state(cfg, toks.shape[0], cache_len)
+        logits, new_states = SP.split_prefill_mixed(
+            params, stacked, toks, states, cfg, modes,
+            lengths=lengths)
+        return jnp.argmax(logits, -1).astype(jnp.int32), new_states
+
+    return _EngineSteps(mono_step, mono_step_dev, mono_prefill,
+                        mixed_step, mixed_step_dev, mixed_prefill)
+
+
 class SlotPool:
     """Fixed pool of decode slots with recycled cache/recurrent state."""
 
@@ -171,6 +264,17 @@ class SlotPool:
                                     _slot_axis(self.cfg))
         for s, p in zip(slots, positions):
             self.positions[s] = p
+
+    def read_rows(self, slots):
+        """The gather inverse of :meth:`write_rows`: extract the given
+        slots' decode state (KV cache rows / recurrent carries, attention
+        cache contents included) as a batched state pytree with batch =
+        ``len(slots)`` on the slot axis — the exact shape ``write_rows``
+        accepts, so ``write_rows(read_rows(s), s, pos)`` is an identity and
+        a row read here injects bit-exactly into any same-config pool (the
+        live-migration snapshot path)."""
+        return _gather_rows(self.states, jnp.asarray(slots, jnp.int32),
+                            _slot_axis(self.cfg))
 
 
 class ContinuousBatchingEngine:
@@ -211,6 +315,10 @@ class ContinuousBatchingEngine:
         self.tick = 0
         self.mode_mix_ticks = 0       # decode ticks with >= 2 distinct modes
         self.decode_ticks = 0
+        self.decoded_slot_ticks = 0   # sum over decode ticks of live slots:
+        #                               tokens decoded ON this engine (a
+        #                               migrated-in session's earlier tokens
+        #                               were decoded elsewhere)
         self.prefill_calls = 0        # jitted batched-prefill dispatches
         self.prefill_tokens = 0       # true prompt tokens prefilled
         self.prefill_padded_tokens = 0  # incl. bucket/batch padding
@@ -230,6 +338,8 @@ class ContinuousBatchingEngine:
         self._tok_shape = ((n_slots, cfg.n_codebooks, 1)
                            if cfg.frontend == "audio" and cfg.n_codebooks > 1
                            else (n_slots, 1))
+        steps = _compiled_steps(cfg, cache_len,
+                                self.stacked_bank is not None)
         self.host_loop = host_loop
         self.max_window = max(int(max_window), 1)
         if not host_loop:
@@ -252,85 +362,26 @@ class ContinuousBatchingEngine:
         #: ``pool.states`` / ``cur_tokens`` / ``_positions`` are stale (and
         #: possibly donated) — ``_sync_device_state`` re-homes them
         self._future: Optional[_cf.Future] = None
+        #: per-ENGINE pipeline worker (lazily created): jitted decode steps
+        #: execute here so the XLA call (which releases the GIL) overlaps
+        #: the main thread's per-tick orchestrator / controller / channel
+        #: bookkeeping. A single worker keeps execution strictly FIFO —
+        #: step t+1's closure reads step t's future, so device-side
+        #: ordering (and therefore every decoded token) is deterministic.
+        #: Per-engine (not module-global) so N cluster replicas pipeline
+        #: their device loops CONCURRENTLY instead of serializing through
+        #: one shared FIFO thread — and so one engine's donated-buffer
+        #: lifetime can never interleave with another's. ``close()`` (or
+        #: the context manager) shuts it down.
+        self._exec: Optional[_cf.ThreadPoolExecutor] = None
         self._pending: List[Request] = []             # not yet "arrived"
 
-        @jax.jit
-        def mono_step(params, tok, states, pos):
-            return T.decode_step(params, tok, states, pos, cfg)
-        self._mono_step = mono_step
-
-        # device-resident decode window: a [K, B] mode matrix drives K
-        # whole ticks in ONE jitted lax.scan — argmax + token feedback +
-        # position increments all on device, slot-pool state and positions
-        # donated so XLA updates the resident pool in place instead of
-        # copying the whole KV/recurrent pool every tick. Mode choice and
-        # budget-based retirement depend only on channels and counts (never
-        # on token values), so the host precomputes the window and reads
-        # the [K, B] token block back one window late. Free slots ride
-        # along (their positions drift, but admission rewrites them).
-        @functools.partial(jax.jit, donate_argnums=(2, 3))
-        def mono_step_dev(params, tok, states, positions, modes_k):
-            def body(carry, _modes):
-                tok, states, positions = carry
-                logits, new_states = T.decode_step(params, tok, states,
-                                                   positions, cfg)
-                nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-                nxt = nxt.reshape(tok.shape)
-                return (nxt, new_states, positions + 1), nxt
-
-            carry, toks = jax.lax.scan(body, (tok, states, positions),
-                                       modes_k)
-            return (*carry, toks)
-        self._mono_step_dev = mono_step_dev
-
-        @jax.jit
-        def mono_prefill(params, toks, lengths):
-            # fresh zero states materialize inside the jit (shapes are
-            # static per bucket) — no per-admission host allocation; the
-            # argmax rides inside the jit so only int32 tokens cross the
-            # host boundary
-            states = T.init_decode_state(cfg, toks.shape[0], cache_len)
-            logits, new_states = T.prefill(params, toks, cfg, states,
-                                           lengths=lengths)
-            return jnp.argmax(logits, -1).astype(jnp.int32), new_states
-        self._mono_prefill = mono_prefill
-
-        if self.stacked_bank is not None:
-            @jax.jit
-            def mixed_step(params, stacked, tok, states, positions, modes):
-                return SP.split_decode_step_mixed(params, stacked, tok,
-                                                  states, positions, cfg,
-                                                  modes)
-            self._mixed_step = mixed_step
-
-            @functools.partial(jax.jit, donate_argnums=(3, 4))
-            def mixed_step_dev(params, stacked, tok, states, positions,
-                               modes_k):
-                def body(carry, modes):
-                    tok, states, positions = carry
-                    logits, new_states = SP.split_decode_step_mixed(
-                        params, stacked, tok, states, positions, cfg, modes)
-                    nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-                    nxt = nxt.reshape(tok.shape)
-                    return (nxt, new_states, positions + 1), nxt
-
-                carry, toks = jax.lax.scan(body, (tok, states, positions),
-                                           modes_k)
-                return (*carry, toks)
-            self._mixed_step_dev = mixed_step_dev
-
-            @jax.jit
-            def mixed_prefill(params, stacked, toks, lengths, modes):
-                states = T.init_decode_state(cfg, toks.shape[0], cache_len)
-                logits, new_states = SP.split_prefill_mixed(
-                    params, stacked, toks, states, cfg, modes,
-                    lengths=lengths)
-                return jnp.argmax(logits, -1).astype(jnp.int32), new_states
-            self._mixed_prefill = mixed_prefill
-        else:
-            self._mixed_step = None
-            self._mixed_step_dev = None
-            self._mixed_prefill = None
+        self._mono_step = steps.mono_step
+        self._mono_step_dev = steps.mono_step_dev
+        self._mono_prefill = steps.mono_prefill
+        self._mixed_step = steps.mixed_step
+        self._mixed_step_dev = steps.mixed_step_dev
+        self._mixed_prefill = steps.mixed_prefill
 
     # -- submission -----------------------------------------------------------
     def submit(self, req: Request) -> bool:
@@ -606,6 +657,7 @@ class ContinuousBatchingEngine:
         nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
 
         self.decode_ticks += 1
+        self.decoded_slot_ticks += len(self.active)
         if len({int(m) for s, m in enumerate(modes) if s in self.active}) > 1:
             self.mode_mix_ticks += 1
 
@@ -677,6 +729,7 @@ class ContinuousBatchingEngine:
         self._inflight = (snapshot, fut, k)
 
         self.decode_ticks += k
+        self.decoded_slot_ticks += k * len(snapshot)
         active_slots = set(self.active)
         for i in range(k):
             if len({int(m) for s, m in enumerate(modes_k[i])
@@ -723,9 +776,38 @@ class ContinuousBatchingEngine:
                              modes_dev)
             return mono(params, tok, states, positions, modes_dev)
 
-        fut = _pipeline().submit(work)
+        fut = self._pipeline().submit(work)
         self._future = fut
         return fut
+
+    def _pipeline(self) -> _cf.ThreadPoolExecutor:
+        if self._exec is None:
+            self._exec = _cf.ThreadPoolExecutor(
+                max_workers=1, thread_name_prefix="decode-pipeline")
+            # callers that drop the engine without close() must not pin a
+            # worker thread for the life of the process: shut the executor
+            # down (non-blocking) when the engine is garbage-collected
+            self._exec_finalizer = weakref.finalize(
+                self, self._exec.shutdown, False)
+        return self._exec
+
+    def close(self):
+        """Land any in-flight window (tokens are materialized, buffers
+        re-homed) and shut this engine's pipeline worker down. Idempotent;
+        the engine remains usable afterwards (a new worker spawns lazily on
+        the next dispatch)."""
+        self._materialize_inflight()
+        self._sync_device_state()
+        if self._exec is not None:
+            self._exec_finalizer.detach()
+            self._exec.shutdown(wait=True)
+            self._exec = None
+
+    def __enter__(self) -> "ContinuousBatchingEngine":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
     def _sync_device_state(self):
         """Land the last dispatched window's buffers back on the engine.
@@ -791,6 +873,7 @@ class ContinuousBatchingEngine:
         self.finished.clear()
         self.tick = 0
         self.decode_ticks = self.mode_mix_ticks = 0
+        self.decoded_slot_ticks = 0
         self.prefill_calls = self.prefill_tokens = 0
         self.prefill_padded_tokens = 0
         self.requests_over_capacity = self.requests_truncated = 0
@@ -848,6 +931,7 @@ class ContinuousBatchingEngine:
             "decode_wire_bytes_per_token": decode_wire / max(dec_toks, 1),
             "mode_counts": mix,
             "decode_ticks": self.decode_ticks,
+            "decoded_slot_ticks": self.decoded_slot_ticks,
             "mixed_mode_ticks": self.mode_mix_ticks,
             "prefill_calls": self.prefill_calls,
             "prefill_tokens": self.prefill_tokens,

@@ -1,0 +1,449 @@
+"""Edge-cluster serving: N decoder replicas behind a router, with live
+session migration on mmWave cell handover.
+
+The paper's mobile-edge setting has one decoder per cell's edge server.
+Serving real traffic therefore means a *cluster*: ``EdgeCluster`` owns N
+``ContinuousBatchingEngine`` replicas (replica ``i`` fronts cell ``i``), a
+router with pluggable placement policies, and a handover loop driven by
+each UE's :class:`~repro.core.channel.MobilityChannel` — when a UE crosses
+a cell boundary mid-generation, the cluster applies one of three policies:
+
+``migrate``
+    Live migration (``serving/migration.py``): extract the session's slot
+    state as a :class:`~repro.serving.migration.MigrationSnapshot`
+    (optionally quantized at ``snapshot_bits``), charge the simulated
+    backhaul for its bytes/latency, and inject it into a free slot on the
+    new cell's replica. Raw snapshots keep the remaining token stream
+    bit-identical to an unmigrated run.
+``stay``
+    Stay-and-degrade: the session keeps decoding on the old replica while
+    the channel's ``detach_factor`` throttles every subsequent uplink
+    transfer — the baseline migration is measured against.
+``drop``
+    Drop-and-replay: retire the partial session and resubmit
+    ``prompt + emitted tokens`` as a fresh prompt on the new replica —
+    no state crosses the backhaul, but the whole context re-uploads and
+    re-prefills. The cluster folds the partial accounting into the replay
+    session's final result.
+
+Placement policies (new-request routing):
+
+``least-loaded``   replica with the fewest active + queued sessions;
+``best-channel``   the replica fronting the UE's current physical cell
+                   (mobility channels; others fall back to least-loaded);
+``round-robin``    strict rotation.
+
+Replicas are independent engines: each has its own slot pool, its own
+orchestrator/controller (per-edge-server control plane — migrated sessions
+carry their link EWMA and dwell state across, see ``migration.py``), and —
+since the pipeline executor is per-engine — its own device-loop pipeline
+thread, so N replicas overlap their decode windows instead of serializing
+through one FIFO.
+"""
+from __future__ import annotations
+
+from typing import Dict, Hashable, List, Optional, Sequence
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import bottleneck
+from repro.core.channel import MobilityChannel, tx_seconds
+from repro.core.orchestrator import (AppRequirement, ModeProfile,
+                                     Orchestrator)
+from repro.serving.batcher import ContinuousBatchingEngine
+from repro.serving.migration import (detach_session, extract_session,
+                                     inject_session)
+from repro.serving.session import Request, Session
+
+PLACEMENTS = ("least-loaded", "best-channel", "round-robin")
+HANDOVER_POLICIES = ("migrate", "stay", "drop")
+
+
+def default_orchestrator(cfg: ModelConfig,
+                         latency_budget_s: float = 0.006, *,
+                         ema: float = 0.5,
+                         hysteresis: float = 1.0) -> Orchestrator:
+    """One per-replica control plane from the analytic payload model (the
+    same calibration ``launch/serve.py`` uses for smoke weights). The
+    serving benchmarks build theirs through here too, so an A/B bench and
+    the cluster can never drift onto different calibrations."""
+    return Orchestrator(
+        [ModeProfile(m, bottleneck.mode_payload_bytes(cfg, 1, 1, m), float(m))
+         for m in range(cfg.split.n_modes)],
+        AppRequirement(latency_budget_s=latency_budget_s),
+        ema=ema, hysteresis=hysteresis)
+
+
+class EdgeCluster:
+    """N-replica split-serving cluster with handover-aware routing.
+
+    ``make_orchestrator``/``make_controller`` are per-replica factories
+    ``(replica_idx) -> Orchestrator | ModeController | None``; the default
+    builds an independent :func:`default_orchestrator` per replica. Every
+    engine kwarg (``host_loop``, ``max_window``, ``max_pending``, ...)
+    passes through ``engine_kwargs``.
+    """
+
+    def __init__(self, params, cfg: ModelConfig, *, n_replicas: int = 2,
+                 n_slots: int = 4, cache_len: int = 128,
+                 placement: str = "least-loaded",
+                 handover: str = "migrate",
+                 snapshot_bits: int = 0,
+                 backhaul_bps: float = 1.25e9,
+                 latency_budget_s: float = 0.006,
+                 make_orchestrator=None, make_controller=None,
+                 **engine_kwargs):
+        if placement not in PLACEMENTS:
+            raise ValueError(f"placement must be one of {PLACEMENTS}")
+        if handover not in HANDOVER_POLICIES:
+            raise ValueError(
+                f"handover must be one of {HANDOVER_POLICIES}")
+        if n_replicas < 1:
+            raise ValueError("need at least one replica")
+        self.cfg = cfg
+        self.placement = placement
+        self.handover = handover
+        self.snapshot_bits = int(snapshot_bits)
+        self.backhaul_bps = float(backhaul_bps)
+        self.replicas: List[ContinuousBatchingEngine] = []
+        for i in range(n_replicas):
+            kw = dict(engine_kwargs)
+            if make_controller is not None:
+                ctl = make_controller(i)
+                if ctl is not None:
+                    kw["controller"] = ctl
+            elif make_orchestrator is not None:
+                kw["orchestrator"] = make_orchestrator(i)
+            else:
+                kw["orchestrator"] = default_orchestrator(cfg,
+                                                          latency_budget_s)
+            self.replicas.append(ContinuousBatchingEngine(
+                params, cfg, n_slots=n_slots, cache_len=cache_len, **kw))
+        self._rr = 0                       # round-robin cursor
+        self._home: Dict[Hashable, int] = {}
+        #: snapshots/replays that could not land yet (target pool or queue
+        #: full); retried every cluster step
+        self._parked: List[tuple] = []
+        #: partial sessions superseded by a drop-and-replay, folded into
+        #: the replay session's result at collection
+        self._replay_base: Dict[Hashable, Session] = {}
+        self.finished: List[Session] = []
+        self._collected: set = set()       # id()s already merged
+        # cluster-level counters
+        self.migrations = 0
+        self.migration_bytes = 0
+        self.migration_transfer_s = 0.0
+        self.replays = 0
+        self.replayed_tokens = 0
+        self.handovers = 0                 # boundary crossings acted on
+        self.handovers_ignored = 0         # crossings under the stay policy
+        self.rejected = 0                  # router-level submit rejections
+
+    # -- routing --------------------------------------------------------------
+    def _load(self, eng: ContinuousBatchingEngine) -> int:
+        return len(eng.active) + len(eng.queue) + len(eng._pending)
+
+    def place(self, req: Request) -> int:
+        """Pick the home replica for a new request under the configured
+        placement policy (exposed for tests and custom routers)."""
+        if self.placement == "round-robin":
+            r = self._rr % len(self.replicas)
+            self._rr += 1
+            return r
+        if self.placement == "best-channel" and \
+                isinstance(req.channel, MobilityChannel):
+            return req.channel.current_cell % len(self.replicas)
+        return min(range(len(self.replicas)),
+                   key=lambda i: (self._load(self.replicas[i]), i))
+
+    def submit(self, req: Request) -> bool:
+        """Route a request to its home replica. Returns False when that
+        replica's admission queue rejected it (back-pressure).
+
+        Mobility scripts must only name cells this cluster fronts
+        (replica ``i`` fronts cell ``i``): a cell id >= ``n_replicas``
+        would alias onto some replica under the modulo map and a crossing
+        into it could be misread as "crossed back into the serving cell",
+        silently disabling migration for the session — so it is an error.
+        """
+        if isinstance(req.channel, MobilityChannel) and \
+                int(req.channel.cells.max()) >= len(self.replicas):
+            raise ValueError(
+                f"request {req.rid!r}: mobility script names cell "
+                f"{int(req.channel.cells.max())} but the cluster has only "
+                f"{len(self.replicas)} replicas (replica i fronts cell i)")
+        r = self.place(req)
+        if isinstance(req.channel, MobilityChannel):
+            # the session will be served from replica r's cell until a
+            # migration (or drop-and-replay) re-homes it
+            req.channel.serving_cell = r
+        ok = self.replicas[r].submit(req)
+        if ok:
+            self._home[req.rid] = r
+        else:
+            self.rejected += 1
+        return ok
+
+    # -- the cluster tick -----------------------------------------------------
+    def step(self) -> bool:
+        """One cluster tick: every replica advances one engine step (device
+        replicas may cover a whole decode window), then pending handovers
+        are applied and parked migrations/replays retried. Returns False
+        when no replica has work and nothing is parked."""
+        progressed = [eng.step() for eng in self.replicas]
+        acted = self._process_handovers()
+        drained = self._drain_parked()
+        return any(progressed) or acted or drained or bool(self._parked)
+
+    def _process_handovers(self) -> bool:
+        acted = False
+        for r, eng in enumerate(self.replicas):
+            for slot, sess in sorted(eng.active.items()):
+                ch = sess.request.channel
+                if not isinstance(ch, MobilityChannel):
+                    continue
+                pending = ch.pending_handover
+                if pending is not None:
+                    sess.handover_ticks = list(ch.handover_ticks)
+                    acted = True
+                    self.handovers += 1
+                    if self.handover == "stay":
+                        # acknowledge the event but keep the session where
+                        # it is: every later uplink transfer pays
+                        # detach_factor
+                        ch.pending_handover = None
+                        self.handovers_ignored += 1
+                        continue
+                    target = pending % len(self.replicas)
+                elif self.handover != "stay" and ch.detached:
+                    # no crossing *event*, but the session is serving
+                    # detached anyway — e.g. least-loaded placement put it
+                    # on a replica that never fronted its cell. A migrating
+                    # cluster corrects that instead of paying detach_factor
+                    # for the session's whole life.
+                    target = ch.last_cell % len(self.replicas)
+                    acted = True
+                else:
+                    continue
+                if target == r:
+                    ch.ack_handover(r)      # crossed back into home cell
+                elif self.handover == "migrate":
+                    self._migrate(eng, r, sess, target)
+                else:                        # drop-and-replay
+                    self._drop_replay(eng, r, sess, target)
+        return acted
+
+    def _migrate(self, eng, r: int, sess: Session, target: int):
+        snap = extract_session(eng, sess.request.rid,
+                               bits=self.snapshot_bits, source_replica=r)
+        t = tx_seconds(snap.nbytes, self.backhaul_bps)
+        sess.migrations.append({
+            "kind": "migrate", "tick": eng.tick, "from_replica": r,
+            "to_replica": target, "bytes": snap.nbytes,
+            "bits": snap.bits, "transfer_s": round(t, 6)})
+        sess.transfer_s += t
+        self.migrations += 1
+        self.migration_bytes += snap.nbytes
+        self.migration_transfer_s += t
+        if inject_session(self.replicas[target], snap):
+            self._land(snap.rid, target, sess.request.channel)
+        else:
+            self._parked.append(("migrate", snap, target))
+
+    def _drop_replay(self, eng, r: int, sess: Session, target: int):
+        rid = sess.request.rid
+        if sess.request.prompt.ndim != 1:
+            raise NotImplementedError("drop-and-replay cannot reconstruct "
+                                      "multi-codebook (audio) prompts from "
+                                      "the emitted token stream")
+        # drop ships no state: detach lands in-flight windows and frees
+        # the slot without the device->host state copy a snapshot costs
+        _, _, requirement, _ = detach_session(eng, rid)
+        base = self._replay_base.get(rid)
+        if base is not None:                # dropped before: fold the chain
+            self._fold(base, sess)
+        else:
+            base = self._replay_base[rid] = sess
+        # the replay prompt is the ORIGINAL prompt plus every token emitted
+        # so far (across the whole drop chain) — greedy decode regenerates
+        # the decoder state by prefilling the full context on the target
+        budget = base.gen_budget or base.request.max_new_tokens
+        remaining = budget - len(base.tokens)
+        base.migrations.append({
+            "kind": "replay", "tick": eng.tick, "from_replica": r,
+            "to_replica": target, "bytes": 0, "bits": 0,
+            "replayed_tokens": len(base.tokens)})
+        self.replays += 1
+        self.replayed_tokens += len(base.tokens)
+        prompt = base.request.prompt
+        req = Request(
+            rid=rid,
+            prompt=np.concatenate([prompt,
+                                   np.asarray(base.tokens, prompt.dtype)]),
+            max_new_tokens=max(remaining, 1),
+            channel=base.request.channel,
+            requirement=requirement or base.request.requirement,
+            arrival_tick=self.replicas[target].tick)
+        if self.replicas[target].submit(req):
+            self._land(rid, target, req.channel)
+        else:
+            self._parked.append(("replay", req, target))
+
+    def _land(self, rid: Hashable, target: int, ch) -> None:
+        self._home[rid] = target
+        if isinstance(ch, MobilityChannel):
+            ch.ack_handover(target)
+
+    def _drain_parked(self) -> bool:
+        still, drained = [], False
+        for kind, item, target in self._parked:
+            if kind == "migrate":
+                ok = inject_session(self.replicas[target], item)
+                rid, ch = item.rid, item.session.request.channel
+            else:
+                ok = self.replicas[target].submit(item)
+                rid, ch = item.rid, item.channel
+            if ok:
+                drained = True
+                self._land(rid, target, ch)
+            else:
+                still.append((kind, item, target))
+        self._parked = still
+        return drained
+
+    # -- collection -----------------------------------------------------------
+    @staticmethod
+    def _fold(base: Session, cont: Session) -> None:
+        """Fold a continuation session's accounting into its base (the
+        partial session a drop-and-replay superseded)."""
+        base.tokens = base.tokens + cont.tokens
+        base.wire_bytes += cont.wire_bytes
+        base.prefill_wire_bytes += cont.prefill_wire_bytes
+        base.transfer_s += cont.transfer_s
+        base.deadline_misses += cont.deadline_misses
+        base.escalations += cont.escalations
+        base.migrations = base.migrations + cont.migrations
+        base.mode_trace = base.mode_trace + cont.mode_trace
+        base.finished_tick = cont.finished_tick
+        for m, c in cont.mode_counts.items():
+            base.mode_counts[m] = base.mode_counts.get(m, 0) + c
+
+    def collect(self) -> List[Session]:
+        """Sweep every replica's finished sessions into the cluster-level
+        list, folding drop-and-replay chains into one merged session per
+        rid. Idempotent across calls; returns the cluster list."""
+        for eng in self.replicas:
+            for sess in eng.finished:
+                if id(sess) in self._collected:
+                    continue
+                self._collected.add(id(sess))
+                rid = sess.request.rid
+                base = self._replay_base.pop(rid, None)
+                if base is not None:
+                    self._fold(base, sess)
+                    sess = base
+                ch = sess.request.channel
+                if isinstance(ch, MobilityChannel):
+                    sess.handover_ticks = list(ch.handover_ticks)
+                self.finished.append(sess)
+        return self.finished
+
+    def run(self, requests: Optional[Sequence[Request]] = None,
+            max_ticks: int = 100_000) -> List[Session]:
+        """Drive the cluster until every submitted request completes (or
+        the tick budget runs out); returns the merged finished sessions."""
+        for r in requests or []:
+            self.submit(r)
+        for _ in range(max_ticks):
+            if not self.step():
+                break
+        for eng in self.replicas:
+            eng._materialize_inflight()
+            eng._sync_device_state()
+        return self.collect()
+
+    def warm(self, prompt: np.ndarray, gen: int = 2):
+        """Trace every replica's compiled paths before a measured run.
+        Replicas of one cluster share their jitted step objects (see
+        ``batcher._compiled_steps``), so the first replica pays the XLA
+        compiles and the rest just trace-hit."""
+        for eng in self.replicas:
+            eng.warm(np.asarray(prompt), gen=gen)
+
+    def close(self):
+        """Shut every replica's pipeline worker down (see
+        ``ContinuousBatchingEngine.close``)."""
+        for eng in self.replicas:
+            eng.close()
+
+    def __enter__(self) -> "EdgeCluster":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -- aggregate stats ------------------------------------------------------
+    def stats(self) -> dict:
+        self.collect()
+        done = self.finished
+        toks = sum(len(s.tokens) for s in done)
+        # every admission's first token is a prefill argmax, and a
+        # drop-and-replay chain re-admits once per replay — each fold
+        # therefore contributes one more prefill-delivered (non-decode)
+        # token that per-decode-token rates must not divide by
+        dec = sum(max(len(s.tokens) - 1
+                      - sum(1 for m in s.migrations
+                            if m["kind"] == "replay"), 0)
+                  for s in done)
+        misses = sum(s.deadline_misses for s in done)
+        latencies = []
+        for s in done:
+            ch = s.request.channel
+            if isinstance(ch, MobilityChannel):
+                latencies.extend(ch.handover_latencies)
+        per_replica = []
+        for i, eng in enumerate(self.replicas):
+            st = eng.stats()
+            per_replica.append({
+                "replica": i,
+                "finished": st["requests_finished"],
+                "active": len(eng.active),
+                "queued": len(eng.queue),
+                "free_slots": eng.pool.n_free,
+                "decode_ticks": st["decode_ticks"],
+                "decode_tokens": st["decode_tokens"],
+                # decoded_slot_ticks counts work done ON this replica — a
+                # migrated-in session's earlier tokens were decoded on its
+                # previous home and must not inflate this occupancy
+                "occupancy": round(
+                    st["decoded_slot_ticks"]
+                    / max(st["decode_ticks"] * eng.pool.n_slots, 1), 3),
+            })
+        return {
+            "n_replicas": len(self.replicas),
+            "placement": self.placement,
+            "handover_policy": self.handover,
+            "snapshot_bits": self.snapshot_bits,
+            "requests_finished": len(done),
+            "requests_rejected": self.rejected,
+            "generated_tokens": toks,
+            "decode_tokens": dec,
+            "wire_bytes": sum(s.wire_bytes for s in done),
+            "decode_wire_bytes_per_token": (
+                sum(s.wire_bytes - s.prefill_wire_bytes for s in done)
+                / max(dec, 1)),
+            "deadline_misses": misses,
+            "deadline_miss_rate": misses / max(dec, 1),
+            "handovers": self.handovers,
+            "handovers_ignored": self.handovers_ignored,
+            "migrations": self.migrations,
+            "migration_bytes": self.migration_bytes,
+            "migration_transfer_s": round(self.migration_transfer_s, 6),
+            "parked": len(self._parked),
+            "replays": self.replays,
+            "replayed_tokens": self.replayed_tokens,
+            "mean_handover_latency_ticks": (
+                float(np.mean(latencies)) if latencies else 0.0),
+            "per_replica": per_replica,
+        }

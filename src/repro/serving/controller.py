@@ -101,6 +101,18 @@ class ModeController:
         self.orch.release(rid)
         return self._ctl.pop(rid, None)
 
+    def detach(self, rid: Hashable) -> Optional[SlotControl]:
+        """Remove and return the session's control record WITHOUT touching
+        the orchestrator (the caller detaches that separately) — the
+        live-migration export: dwell timer, utilization EWMA, and switch
+        trace travel with the session to the target controller."""
+        return self._ctl.pop(rid, None)
+
+    def attach(self, rid: Hashable, ctl: Optional[SlotControl]) -> None:
+        """Install a control record exported by :meth:`detach`."""
+        if ctl is not None:
+            self._ctl[rid] = ctl
+
     # -- the per-tick control loop --------------------------------------------
     def step_modes(self, rids: Sequence[Hashable],
                    capacities: Sequence[Optional[float]],

@@ -1,0 +1,229 @@
+"""Live session migration between edge decoder replicas (mmWave handover).
+
+When a UE crosses a cell boundary mid-generation, its split session's
+decode state lives on the *old* cell's edge server. The choices are to keep
+serving it over a degraded inter-cell path (stay-and-degrade), to restart
+the prompt on the new cell (drop-and-replay), or — this module — to move
+the live decode state: one ``SlotPool.read_rows`` gather extracts the
+slot's per-layer state (KV cache rows, recurrent carries), position, and
+current token as a :class:`MigrationSnapshot`; the snapshot is (optionally)
+quantized for the simulated backhaul wire and charged for transfer
+bytes/latency; and :func:`inject_session` installs it into a free slot on
+the target replica's pool such that the migrated session's remaining
+tokens are **bit-identical** to an unmigrated run (raw snapshots — the
+gather/scatter pair is exact; quantized snapshots trade fidelity for
+backhaul bytes, and tests measure both).
+
+Orchestration state migrates with the session: the per-link capacity EWMA
+(:class:`~repro.core.orchestrator.LinkState`), the session's
+``AppRequirement``, and — under the adaptive policy — the controller's
+``SlotControl`` (dwell timer, utilization EWMA) all detach from the source
+and attach at the target, so mode selection after the handover continues
+exactly where it left off instead of re-cold-starting.
+
+Wire format (``MigrationSnapshot.wire``): the state pytree is flattened;
+each floating leaf is either shipped raw (``bits=0``) or symmetric
+row-wise quantized at ``bits`` (codes + one scale per row — the same
+``core.quant`` wire rules as the boundary payload, including the ternary
+``bits=1`` 2-bit packing); integer leaves (e.g. int8 KV caches) always
+ship raw. ``nbytes`` is the accounted backhaul payload:
+``quant.payload_bytes`` per leaf plus the position/token header.
+
+The engine-facing functions are deliberately free functions over
+``ContinuousBatchingEngine`` internals rather than engine methods — the
+cluster router (``serving/cluster.py``) is their only intended caller, and
+keeping them here keeps the engine unaware of multi-replica topology.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Hashable, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import quant
+from repro.core.orchestrator import AppRequirement, LinkState
+from repro.serving.batcher import (ContinuousBatchingEngine, _admit_scatter,
+                                   _slot_axis)
+from repro.serving.controller import SlotControl
+from repro.serving.session import Session
+
+#: accounted wire overhead per snapshot beyond the state leaves: position
+#: and rid/routing metadata (the current token is charged separately at
+#: 4 bytes per value — audio sessions carry one per codebook)
+SNAPSHOT_HEADER_BYTES = 16
+
+
+@dataclass
+class MigrationSnapshot:
+    """One live session's complete decode state, off-pool and serializable.
+
+    ``wire`` holds one entry per state leaf: ``("raw", array)`` or
+    ``("q", codes, scales, dtype_str)``; ``treedef`` restores the pytree.
+    """
+    session: Session
+    position: int
+    cur_token: np.ndarray              # the token the next decode step eats
+    wire: List[tuple]
+    treedef: Any
+    bits: int                          # 0 = raw (bit-exact) snapshot
+    nbytes: int                        # accounted backhaul payload
+    link: Optional[LinkState] = None
+    requirement: Optional[AppRequirement] = None
+    control: Optional[SlotControl] = None
+    source_replica: int = -1
+
+    @property
+    def rid(self) -> Hashable:
+        return self.session.request.rid
+
+
+def _encode_state(state, bits: int) -> Tuple[List[tuple], Any, int]:
+    """Flatten a single-slot state pytree into wire entries + byte count.
+
+    Floating leaves quantize at ``bits`` (row-wise over the last dim, the
+    same symmetric scheme as the boundary payload); integer leaves (packed
+    KV codes, counters) ship raw — re-quantizing codes would corrupt them.
+    """
+    leaves, treedef = jax.tree.flatten(state)
+    wire: List[tuple] = []
+    nbytes = SNAPSHOT_HEADER_BYTES
+    for leaf in leaves:
+        arr = np.asarray(leaf)              # device -> host: the wire copy
+        if bits and arr.ndim and jnp.issubdtype(leaf.dtype, jnp.floating):
+            codes, scales = quant.quantize(jnp.asarray(arr), bits)
+            wire.append(("q", np.asarray(codes), np.asarray(scales),
+                         str(arr.dtype)))
+            nbytes += quant.payload_bytes(arr.shape, bits)
+        else:
+            wire.append(("raw", arr))
+            nbytes += quant.payload_bytes(arr.shape, 0,
+                                          dtype_bytes=arr.dtype.itemsize)
+    return wire, treedef, nbytes
+
+
+def _decode_state(snap: MigrationSnapshot):
+    """Rebuild the batched (batch=1 on the slot axis) state pytree the
+    target pool's ``write_rows`` scatter expects."""
+    leaves = []
+    for entry in snap.wire:
+        if entry[0] == "raw":
+            leaves.append(jnp.asarray(entry[1]))
+        else:
+            _, codes, scales, dtype = entry
+            x = quant.dequantize(jnp.asarray(codes), jnp.asarray(scales),
+                                 snap.bits)
+            leaves.append(x.astype(dtype))
+    return jax.tree.unflatten(snap.treedef, leaves)
+
+
+def _land_and_find(eng: ContinuousBatchingEngine, rid: Hashable) -> int:
+    """Locate ``rid``'s slot and land the lagged pipeline: token values
+    for every dispatched tick must be on the session, and the donated
+    pool buffers re-homed, before the slot is read or released. Raises
+    ``KeyError`` if ``rid`` is not live on this engine (it may have
+    finished already — callers must check before acting on a handover)."""
+    slot = next((s for s, sess in eng.active.items()
+                 if sess.request.rid == rid), None)
+    if slot is None:
+        raise KeyError(f"request {rid!r} is not live on this engine")
+    eng._materialize_inflight()
+    eng._sync_device_state()
+    return slot
+
+
+def _detach(eng: ContinuousBatchingEngine, slot: int, rid: Hashable
+            ) -> Tuple[Session, Optional[LinkState],
+                       Optional[AppRequirement], Optional[SlotControl]]:
+    """Detach the session's orchestrator/controller state and free its
+    slot (the pipeline must already be landed — see ``_land_and_find``)."""
+    sess = eng.active[slot]
+    link = requirement = control = None
+    if eng.controller is not None:
+        control = eng.controller.detach(rid)
+    if eng.orch is not None:
+        link, requirement = eng.orch.detach(rid)
+    del eng.active[slot]
+    eng.pool.release(slot)
+    return sess, link, requirement, control
+
+
+def detach_session(eng: ContinuousBatchingEngine, rid: Hashable
+                   ) -> Tuple[Session, Optional[LinkState],
+                              Optional[AppRequirement],
+                              Optional[SlotControl]]:
+    """Remove a live session from ``eng`` WITHOUT snapshotting its decode
+    state. This is the whole of what drop-and-replay needs — the state is
+    abandoned, so no device->host copy happens."""
+    return _detach(eng, _land_and_find(eng, rid), rid)
+
+
+def extract_session(eng: ContinuousBatchingEngine, rid: Hashable, *,
+                    bits: int = 0,
+                    source_replica: int = -1) -> MigrationSnapshot:
+    """Pull a live session off ``eng`` WITH its decode state: gather the
+    slot's state rows (``SlotPool.read_rows``), encode them for the
+    backhaul wire, then detach. The engine keeps running — the extracted
+    session simply stops decoding here.
+
+    ``bits=0`` snapshots are bit-exact; ``bits>0`` quantizes floating
+    leaves for the backhaul wire (lossy). Raises ``KeyError`` if ``rid``
+    is not live on this engine.
+    """
+    slot = _land_and_find(eng, rid)
+    state = eng.pool.read_rows([slot])
+    wire, treedef, nbytes = _encode_state(state, bits)
+    tok = np.asarray(eng.cur_tokens[slot], np.int32)
+    nbytes += int(tok.size) * 4
+    sess, link, requirement, control = _detach(eng, slot, rid)
+    return MigrationSnapshot(session=sess, position=int(sess.pos),
+                             cur_token=tok, wire=wire, treedef=treedef,
+                             bits=bits, nbytes=nbytes, link=link,
+                             requirement=requirement, control=control,
+                             source_replica=source_replica)
+
+
+def inject_session(eng: ContinuousBatchingEngine,
+                   snap: MigrationSnapshot) -> bool:
+    """Install a snapshot into a free slot on ``eng``. Returns ``False``
+    (and changes nothing) when the pool is full — the caller queues the
+    snapshot and retries after a retirement frees a slot.
+
+    The scatter is the admission path's own (``write_rows`` on the host
+    loop, the donated ``_admit_scatter`` on the device loop), so an
+    injected raw snapshot is indistinguishable from having decoded every
+    prior token on this engine — the remaining stream is bit-identical.
+    No channel tick is consumed: injection is not an admission, and the
+    UE's link realization must continue unbroken across the handover.
+    """
+    if eng.pool.n_free == 0:
+        return False
+    sess, rid = snap.session, snap.rid
+    state = _decode_state(snap)
+    slot = eng.pool.acquire()
+    if eng.host_loop:
+        eng.pool.write_rows(state, [slot], [snap.position])
+        eng.cur_tokens[slot] = snap.cur_token
+    else:
+        # the resident pool may be donated to an in-flight window — land it
+        # before scattering (same rule as device-loop admission)
+        eng._sync_device_state()
+        eng.pool.states, eng._positions, eng.cur_tokens = _admit_scatter(
+            eng.pool.states, eng._positions, eng.cur_tokens, state,
+            jnp.asarray([slot], jnp.int32),
+            jnp.asarray([snap.position], jnp.int32),
+            _slot_axis(eng.cfg), jnp.asarray(snap.cur_token)[None])
+        eng.pool.positions[slot] = snap.position
+    sess.slot = slot
+    eng.active[slot] = sess
+    if eng.orch is not None:
+        # re-attach the migrated link state (capacity EWMA, mode, tick
+        # count) so post-handover mode selection continues where it left
+        # off; a fresh register() would re-cold-start the EWMA
+        eng.orch.attach(rid, snap.link, snap.requirement)
+        eng.orch.register(rid, snap.requirement)   # no-op if attached
+    if eng.controller is not None and snap.control is not None:
+        eng.controller.attach(rid, snap.control)
+    return True

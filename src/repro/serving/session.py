@@ -10,8 +10,9 @@ what it cost on the wire.
 """
 from __future__ import annotations
 
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Deque, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -58,6 +59,13 @@ class Session:
     deadline_misses: int = 0           # decode tokens whose simulated
     #                                    transfer blew the latency budget
     escalations: int = 0               # controller deadline escalations
+    #: one record per live migration this session survived:
+    #: {tick, from_replica, to_replica, snapshot_bytes, bits, transfer_s}
+    #: (empty for single-engine serving — see serving/migration.py)
+    migrations: List[dict] = field(default_factory=list)
+    #: channel ticks at which this session's UE crossed a cell boundary
+    #: (empty when the request's channel has no mobility)
+    handover_ticks: List[int] = field(default_factory=list)
     finished_tick: int = -1
 
     @property
@@ -85,6 +93,8 @@ class Session:
             "mode_switches": max(len(self.mode_trace) - 1, 0),
             "deadline_misses": self.deadline_misses,
             "escalations": self.escalations,
+            "migrations": list(self.migrations),
+            "handover_ticks": list(self.handover_ticks),
             "admitted_tick": self.admitted_tick,
             "finished_tick": self.finished_tick,
         }
@@ -93,11 +103,13 @@ class Session:
 class RequestQueue:
     """Bounded FIFO admission queue. ``submit`` rejects (returns False) when
     the queue is full — back-pressure instead of unbounded memory growth
-    under heavy offered load."""
+    under heavy offered load. Backed by a ``deque`` so admission pops are
+    O(1) (a list's ``pop(0)`` shifts every queued request per admission —
+    O(n) per pop, quadratic over a busy tick's drain)."""
 
     def __init__(self, max_pending: int = 64):
         self.max_pending = max_pending
-        self._q: List[Request] = []
+        self._q: Deque[Request] = deque()
         self.submitted = 0
         self.rejected = 0
 
@@ -113,7 +125,7 @@ class RequestQueue:
         return True
 
     def pop(self) -> Optional[Request]:
-        return self._q.pop(0) if self._q else None
+        return self._q.popleft() if self._q else None
 
     def peek(self) -> Optional[Request]:
         return self._q[0] if self._q else None

@@ -1,6 +1,6 @@
-"""CI gate over the serving benchmark artifact (stdlib only).
+"""CI gate over the serving benchmark artifacts (stdlib only).
 
-    python tools/check_bench.py NEW.json [BASELINE.json]
+    python tools/check_bench.py NEW.json [BASELINE.json] [CLUSTER_NEW.json]
 
 Asserts, against the fresh ``bench_serving.py --json`` output:
 
@@ -18,14 +18,77 @@ Asserts, against the fresh ``bench_serving.py --json`` output:
    check — and the committed baseline should be refreshed by any PR that
    intentionally moves serving performance.
 
+And, when a fresh ``bench_cluster.py --json`` artifact is given:
+
+4. ``handover_ab.migration_wins`` — live migration must beat
+   stay-and-degrade on deadline-miss rate (the edge-cluster subsystem's
+   headline claim — an in-run A/B on identical mobility scripts);
+5. cluster scaling sanity: every multi-replica aggregate decode tokens/s
+   must stay above ``SCALE_FLOOR`` x the single-replica figure from the
+   same run (adding replicas must never crater throughput), plus the
+   usual ``BENCH_TOLERANCE`` regression check against the committed
+   baseline's ``cluster`` section.
+
 Environment overrides: ``MIN_LOOP_SPEEDUP`` (default 1.15),
-``BENCH_TOLERANCE`` (default 0.3).
+``BENCH_TOLERANCE`` (default 0.3), ``SCALE_FLOOR`` (default 0.5).
 """
 from __future__ import annotations
 
 import json
 import os
 import sys
+
+
+def check_cluster(cl: dict, baseline: dict | None) -> list:
+    """Gates over the ``bench_cluster.py`` artifact (``baseline`` is the
+    committed BENCH_serving.json, whose ``cluster`` section pins the
+    scaling reference)."""
+    failures = []
+    scale_floor = float(os.environ.get("SCALE_FLOOR", "0.5"))
+    tolerance = float(os.environ.get("BENCH_TOLERANCE", "0.3"))
+
+    ab = cl.get("handover_ab")
+    if ab is None:
+        failures.append("handover_ab missing from the cluster artifact")
+    elif not ab.get("migration_wins"):
+        failures.append(
+            "live migration must beat stay-and-degrade on deadline-miss "
+            f"rate: migrate {ab.get('migrate')} vs stay {ab.get('stay')}")
+
+    scaling = cl.get("scaling") or []
+    single = next((s for s in scaling if s["replicas"] == 1), None)
+    if not scaling:
+        failures.append("scaling sweep missing from the cluster artifact")
+    elif single is None:
+        # a sweep without the single-replica anchor cannot evaluate the
+        # floor — that must fail loudly, not silently un-gate scaling
+        failures.append("scaling sweep has no single-replica entry to "
+                        "anchor the SCALE_FLOOR check")
+    else:
+        floor = scale_floor * single["decode_tok_per_s"]
+        for s in scaling:
+            if s["replicas"] > 1 and s["decode_tok_per_s"] < floor:
+                failures.append(
+                    f"{s['replicas']}-replica decode "
+                    f"{s['decode_tok_per_s']} tok/s fell below "
+                    f"{floor:.1f} ({scale_floor} x the single-replica "
+                    f"{single['decode_tok_per_s']} from the same run)")
+    base_cl = (baseline or {}).get("cluster")
+    if base_cl is not None:
+        base_scaling = {s["replicas"]: s
+                        for s in base_cl.get("scaling", [])}
+        for s in scaling:
+            base = base_scaling.get(s["replicas"])
+            if base is None:
+                continue
+            floor = tolerance * base["decode_tok_per_s"]
+            if s["decode_tok_per_s"] < floor:
+                failures.append(
+                    f"{s['replicas']}-replica decode "
+                    f"{s['decode_tok_per_s']} tok/s regressed below "
+                    f"{floor:.1f} ({tolerance} x baseline "
+                    f"{base['decode_tok_per_s']})")
+    return failures
 
 
 def check(new: dict, baseline: dict | None) -> list:
@@ -82,6 +145,7 @@ def check(new: dict, baseline: dict | None) -> list:
 def main(argv) -> int:
     new = json.load(open(argv[1]))
     baseline = json.load(open(argv[2])) if len(argv) > 2 else None
+    cluster = json.load(open(argv[3])) if len(argv) > 3 else None
     failures = check(new, baseline)
     summary = {
         "engine_comparison": new.get("engine_comparison"),
@@ -91,6 +155,13 @@ def main(argv) -> int:
         "adaptive_wins": (new.get("channel_trace") or {}).get(
             "adaptive_wins"),
     }
+    if cluster is not None:
+        failures += check_cluster(cluster, baseline)
+        summary["migration_wins"] = (cluster.get("handover_ab") or {}).get(
+            "migration_wins")
+        summary["scaling"] = [{k: s[k] for k in ("replicas",
+                                                 "decode_tok_per_s")}
+                              for s in cluster.get("scaling", [])]
     print(json.dumps(summary, indent=1))
     for f in failures:
         print(f"BENCH CHECK FAILED: {f}", file=sys.stderr)
