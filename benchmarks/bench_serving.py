@@ -17,6 +17,14 @@ pool buffers, one-tick-lagged host sync) vs the legacy host loop
 streams. The speedup lands in ``--json`` as ``engine_comparison`` and CI
 gates on it.
 
+On homogeneous full-attention archs (paged pool by default) the bench also
+runs the long-prompt scenario: every prompt exceeds the dense per-slot
+cache, the dense control engine rejects them all over capacity, and the
+paged engine must finish every one — zero rejections, zero truncation —
+reporting decode tok/s, page-arena occupancy, and how many sessions were
+parked by page-budget backpressure. The ``long_prompt`` JSON section is
+gated by ``tools/check_bench.py``.
+
 ``--channel-trace {static,fade,burst}`` adds the paper's dynamic-adaptation
 A/B: every session rides the *same* scripted capacity trace
 (``TraceChannel``) under two mode policies — the in-flight adaptive
@@ -88,7 +96,18 @@ def run_level(params, cfg, *, n_requests: int, arrival_every: int,
     st = eng.stats()
     eng.close()
     occupancy = st["decode_tokens"] / max(st["decode_ticks"] * n_slots, 1)
+    paged = {}
+    if st["paged"]:
+        paged = {
+            "page_len": st["page_len"],
+            "n_pages": st["n_pages"],
+            "peak_pages_in_use": st["peak_pages_in_use"],
+            "page_occupancy": st["page_occupancy"],
+            "requests_parked": st["requests_parked"],
+        }
     return {
+        "paged": st["paged"],
+        **paged,
         "offered_load_req_per_tick": round(1.0 / arrival_every, 3),
         "requests": n_requests,
         "finished": st["requests_finished"],
@@ -110,6 +129,56 @@ def run_level(params, cfg, *, n_requests: int, arrival_every: int,
         "mean_transfer_ms_per_token": round(
             1e3 * float(np.mean([s.transfer_s / max(len(s.tokens), 1)
                                  for s in done])), 3) if done else 0.0,
+    }
+
+
+def run_long_prompt(params, cfg, *, n_slots: int, gen: int,
+                    cache_len: int = 24, n_requests: int = 4) -> dict:
+    """The paged pool's headline scenario: every prompt is LONGER than the
+    dense per-slot cache, so the legacy ``SlotPool`` engine rejects all of
+    them over capacity — the paged engine must admit and FINISH every one
+    with zero capacity rejections and zero truncation, parking excess
+    sessions until page-budget admission can cover their worst case.
+
+    Reports the paged engine's decode throughput and page-arena occupancy
+    plus the dense control's rejection count; ``tools/check_bench.py``
+    gates on zero rejections and the paged tok/s floor."""
+    prompt_len = cache_len + 8                 # > dense per-slot capacity
+    eng = ContinuousBatchingEngine(params, cfg, n_slots=n_slots,
+                                   cache_len=cache_len,
+                                   orchestrator=default_orchestrator(cfg))
+    assert eng.paged, "long-prompt scenario needs the paged pool"
+    reqs = make_requests(cfg, n_requests, prompt_len=prompt_len, gen=gen,
+                         arrival_every=2)
+    eng.warm(reqs[0].prompt)
+    t0 = time.time()
+    eng.run(reqs)
+    wall = time.time() - t0
+    st = eng.stats()
+    eng.close()
+
+    dense = ContinuousBatchingEngine(params, cfg, n_slots=n_slots,
+                                     cache_len=cache_len, paged=False)
+    dense.run(make_requests(cfg, n_requests, prompt_len=prompt_len,
+                            gen=gen, arrival_every=2))
+    dense_st = dense.stats()
+    dense.close()
+    return {
+        "prompt_len": prompt_len,
+        "dense_cache_len": cache_len,
+        "gen": gen,
+        "requests": n_requests,
+        "finished": st["requests_finished"],
+        "over_capacity": st["requests_over_capacity"],
+        "truncated": st["requests_truncated"],
+        "requests_parked": st["requests_parked"],
+        "decode_tok_per_s": round(st["decode_tokens"] / max(wall, 1e-9), 1),
+        "page_len": st["page_len"],
+        "n_pages": st["n_pages"],
+        "peak_pages_in_use": st["peak_pages_in_use"],
+        "page_occupancy": st["page_occupancy"],
+        "dense_over_capacity": dense_st["requests_over_capacity"],
+        "dense_finished": dense_st["requests_finished"],
     }
 
 
@@ -369,11 +438,25 @@ def main(argv=None):
               f"mixed={r['mixed_mode_ticks']}/{r['decode_ticks']} "
               f"modes={r['mode_counts']}")
 
+    lp = None
+    if T.full_attention_arch(cfg) and cfg.homogeneous:
+        lp = run_long_prompt(params, cfg, n_slots=args.n_slots, gen=args.gen)
+        print(f"long_prompt,prompt={lp['prompt_len']}"
+              f">{lp['dense_cache_len']}=dense_cache,"
+              f"finished={lp['finished']}/{lp['requests']} "
+              f"over_capacity={lp['over_capacity']} "
+              f"parked={lp['requests_parked']} "
+              f"tok/s={lp['decode_tok_per_s']} "
+              f"pages={lp['peak_pages_in_use']}/{lp['n_pages']} "
+              f"dense_rejects={lp['dense_over_capacity']}/{lp['requests']}")
+
     mixed_any = any(r["mixed_mode_ticks"] > 0 for r in levels)
     print(f"serving_summary,mixed_mode_batches={'yes' if mixed_any else 'no'},"
           f"levels={len(levels)},prefill_speedup={pf['ttft_speedup']}x")
     out = {"arch": args.arch, "n_slots": args.n_slots,
            "prefill_comparison": pf, "levels": levels}
+    if lp is not None:
+        out["long_prompt"] = lp
 
     if args.compare_slots:
         ec = compare_engine_loops(

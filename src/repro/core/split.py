@@ -159,7 +159,7 @@ def split_decode_step(params, token, states, cur_pos, cfg: ModelConfig,
 
 
 def split_decode_step_mixed(params, stacked_bank, token, states, positions,
-                            cfg: ModelConfig, mode_idx):
+                            cfg: ModelConfig, mode_idx, block_table=None):
     """One decode step for a *mixed-mode* continuous batch.
 
     Unlike :func:`split_decode_step`, every batch slot decodes at its own
@@ -173,7 +173,10 @@ def split_decode_step_mixed(params, stacked_bank, token, states, positions,
     Per-slot wire bytes are host-side accounting (they depend only on the
     static mode table, not on traced values) — see
     ``bottleneck.mode_payload_bytes(cfg, 1, 1, mode)`` per slot.
-    Returns (logits, new_states).
+    With ``block_table`` ([B, nb] int32, paged serving) the attention
+    leaves of ``states`` are page arenas shared by both halves — the layer
+    axis splits exactly like dense stacked leaves. Returns (logits,
+    new_states).
     """
     s = cfg.split.split_at
     x = T.embed_tokens(params, token, cfg, None)
@@ -181,11 +184,11 @@ def split_decode_step_mixed(params, stacked_bank, token, states, positions,
     enc_st, dec_st = _split_states(states, cfg, s)
     kinds = _kinds(cfg)
     x, enc_new = T.run_layers_decode(enc_l, x, enc_st, positions, cfg,
-                                     kinds=kinds[:s])
+                                     kinds=kinds[:s], block_table=block_table)
     x = bottleneck.boundary_mixed(stacked_bank, x, mode_idx,
                                   dtype=T.model_dtype(cfg))
     x, dec_new = T.run_layers_decode(dec_l, x, dec_st, positions, cfg,
-                                     kinds=kinds[s:])
+                                     kinds=kinds[s:], block_table=block_table)
     x = T.norm_apply_final(params, x, cfg)
     logits = T.lm_logits(params, x, cfg)
     return logits, _merge_states(enc_new, dec_new, cfg)
@@ -196,7 +199,7 @@ def split_decode_step_mixed(params, stacked_bank, token, states, positions,
 # ---------------------------------------------------------------------------
 
 def _prefill_through(params, tokens, cfg: ModelConfig, states, boundary,
-                     lengths):
+                     lengths, block_table=None):
     """Shared whole-prompt prefill skeleton: encoder layers, ``boundary``
     (the wire crossing), decoder layers — populating every layer's decode
     state. Returns (last-real-position logits, new_states)."""
@@ -210,10 +213,12 @@ def _prefill_through(params, tokens, cfg: ModelConfig, states, boundary,
     enc_st, dec_st = _split_states(states, cfg, s)
     kinds = _kinds(cfg)
     x, enc_new = T.run_layers_prefill(enc_l, x, positions, enc_st, cfg,
-                                      kinds=kinds[:s], lengths=lengths)
+                                      kinds=kinds[:s], lengths=lengths,
+                                      block_table=block_table)
     x = boundary(x)
     x, dec_new = T.run_layers_prefill(dec_l, x, positions, dec_st, cfg,
-                                      kinds=kinds[s:], lengths=lengths)
+                                      kinds=kinds[s:], lengths=lengths,
+                                      block_table=block_table)
     last = (lengths - 1 if lengths is not None
             else jnp.full((B,), S - 1, jnp.int32))
     x = jnp.take_along_axis(x, last[:, None, None], axis=1)
@@ -252,7 +257,8 @@ def split_prefill(params, tokens, cfg: ModelConfig, states, mode: int = 0, *,
 
 
 def split_prefill_mixed(params, stacked_bank, tokens, states,
-                        cfg: ModelConfig, mode_idx, *, lengths=None):
+                        cfg: ModelConfig, mode_idx, *, lengths=None,
+                        block_table=None):
     """Batched multi-request prefill with per-row bottleneck modes: one
     forward over a right-padded prompt batch where row b's boundary
     activations cross the wire through its own admission-chosen mode
@@ -266,4 +272,4 @@ def split_prefill_mixed(params, stacked_bank, tokens, states,
         params, tokens, cfg, states,
         lambda x: bottleneck.boundary_mixed(stacked_bank, x, mode_idx,
                                             dtype=T.model_dtype(cfg)),
-        lengths)
+        lengths, block_table)

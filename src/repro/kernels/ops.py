@@ -12,6 +12,7 @@ import jax.numpy as jnp
 from repro.kernels import bottleneck_quant as _bq
 from repro.kernels import boundary_mixed as _bm
 from repro.kernels import dequant_matmul as _dq
+from repro.kernels import paged_attention as _pa
 from repro.kernels import rglru_scan as _rs
 from repro.kernels import ref
 
@@ -138,6 +139,39 @@ def group_layout(stacked, rmode, block_r: int, block_w: int):
                   "nchunk": nchunk_g.astype(jnp.int32),
                   "width": width_g.astype(jnp.int32),
                   "bits": bits_g.astype(jnp.int32)}
+
+
+def paged_kernel_eligible(*, n_q: int, n_kv: int, hd: int,
+                          page_len: int) -> bool:
+    """Whether the serving decode path should route paged attention through
+    the Pallas kernel. Only on a real TPU with MXU-aligned head and page
+    shapes — on CPU the model layer's logical-gather jnp path is both the
+    fast path and the one pinned bit-identical to dense decode (interpret
+    mode is a correctness tool, not a speed tool)."""
+    return _ON_TPU and hd % 128 == 0 and page_len % 8 == 0 \
+        and n_q % n_kv == 0
+
+
+def paged_attention_op(q, k_pages, v_pages, block_table, positions, *,
+                       interpret: bool | None = None):
+    """Paged decode attention (dispatcher). Deliberately NOT jitted itself —
+    serving callers invoke it inside a jitted step, like the boundary op.
+
+    q: [B, nq, hd] (rope applied), ``k_pages``/``v_pages``:
+    [n_pages, page_len, n_kv, hd], ``block_table``: [B, nb] arena page ids,
+    ``positions``: [B]. Routes to the Pallas kernel on TPU (or when
+    ``interpret=True`` — the CPU correctness path for tests); misaligned
+    shapes and plain CPU calls take the blocked jnp oracle. Returns the
+    f32 attention context [B, nq, hd] (pre-``wo``)."""
+    use_pallas = _ON_TPU if interpret is None else bool(interpret)
+    interp = (not _ON_TPU) if interpret is None else bool(interpret)
+    hd = q.shape[-1]
+    plen = k_pages.shape[1]
+    if not use_pallas or hd % 128 or plen % 8 or q.shape[1] % k_pages.shape[2]:
+        return ref.paged_attention_ref(q, k_pages, v_pages, block_table,
+                                       positions)
+    return _pa.paged_attention(q, k_pages, v_pages, block_table, positions,
+                               interpret=interp)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))

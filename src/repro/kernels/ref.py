@@ -103,6 +103,60 @@ def boundary_mixed_grouped_ref(xp, down_w, up_w, norm_scale, hid_g, nchunk_g,
     return jnp.concatenate(outs, axis=0)
 
 
+def paged_attention_ref(q, k_pages, v_pages, block_table, positions):
+    """Blocked jnp oracle for ``paged_attention.paged_attention``.
+
+    Walks (sequence, page) exactly like the kernel grid — same page-skip
+    guard, same f32 online softmax, same ``q.dtype`` rounding barriers at
+    the score / probability / accumulator hand-offs, same op order — so the
+    Pallas kernel is pinned bit-for-bit against it in interpret mode for
+    sub-f32 dtypes (bf16); f32 matches to a few ulp (the barriers are no-op
+    casts there and cannot quantize away XLA's fusion freedom).
+    q: [B, nq, hd]; ``k_pages``/``v_pages``: [n_pages, page_len, n_kv, hd];
+    ``block_table``: [B, nb]; ``positions``: [B] (concrete host values —
+    they steer the python page loop). Returns [B, nq, hd] in ``q.dtype``.
+    Test-scale only (python loop over sequences and pages).
+    """
+    import math
+
+    NEG_INF = -1e30
+    B, nq, hd = q.shape
+    plen = k_pages.shape[1]
+    n_kv = k_pages.shape[2]
+    g = nq // n_kv
+    nb = block_table.shape[1]
+    scale = 1.0 / math.sqrt(hd)
+    dt = q.dtype
+    outs = []
+    for b in range(B):
+        pos_b = int(positions[b])
+        m = jnp.full((1, nq), NEG_INF, jnp.float32)
+        l = jnp.zeros((1, nq), jnp.float32)
+        acc = jnp.zeros((nq, hd), jnp.float32)
+        qf = q[b].astype(jnp.float32)
+        for j in range(nb):
+            if j * plen > pos_b:
+                continue
+            page = block_table[b, j]
+            kf = jnp.repeat(k_pages[page].astype(jnp.float32), g, 1)
+            vf = jnp.repeat(v_pages[page].astype(jnp.float32), g, 1)
+            s = (jnp.einsum("nh,tnh->nt", qf, kf) * scale
+                 ).astype(dt).astype(jnp.float32)
+            t_abs = j * plen + jnp.arange(plen)[None, :]
+            s = jnp.where(t_abs <= pos_b, s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1)[None, :])
+            p = jnp.exp(s - m_new[0][:, None]).astype(dt).astype(jnp.float32)
+            corr = jnp.exp(m - m_new).astype(dt).astype(jnp.float32)
+            m = m_new
+            l = (l * corr).astype(dt).astype(jnp.float32) \
+                + jnp.sum(p, axis=-1)[None, :]
+            acc = (acc * corr[0][:, None]).astype(dt).astype(jnp.float32) \
+                + jnp.einsum("nt,tnh->nh", p, vf).astype(dt).astype(
+                    jnp.float32)
+        outs.append((acc / l[0][:, None]).astype(dt))
+    return jnp.stack(outs)
+
+
 def dequant_matmul_ref(codes, scales, w, out_dtype=jnp.bfloat16):
     """Decoder-side fused dequantize + up-projection.
 

@@ -161,13 +161,10 @@ def run_sync(args, cfg, params):
     t_prefill = time.time() - t0
 
     if args.policy.startswith("static"):
-        if T.full_attention_arch(cfg) and \
-                eng.pos + args.gen > args.cache_len:
-            # same cache-wraparound guard ServingEngine.decode_tokens
-            # applies on the orchestrator path
-            raise ValueError(
-                f"--gen {args.gen} from pos {eng.pos} exceeds --cache-len "
-                f"{args.cache_len} on a full-attention arch")
+        # same cache-wraparound guard ServingEngine.decode_tokens
+        # applies on the orchestrator path
+        T.check_cache_capacity(cfg, eng.pos, args.gen, args.cache_len,
+                               what="--gen")
         mode = int(args.policy[-1])
         out, wire = [], 0
         tok = first

@@ -249,6 +249,92 @@ def init_cache(batch: int, n_kv: int, hd: int, cache_len: int,
     }
 
 
+def paged_prefill_attention(p, x, positions, arena, block_table, *,
+                            n_q: int, n_kv: int, hd: int, rope_theta: float,
+                            lengths=None):
+    """Full-sequence prefill that scatters K/V rows through a block table
+    into a paged arena instead of ``mod(pos, cache_len)`` rolling slots.
+
+    ``arena``: per-layer ``{"k","v"}`` leaves of shape
+    ``[n_pages, page_len, n_kv, hd]`` shared by every slot; ``block_table``:
+    ``[B, nb]`` page ids, one row per sequence, covering at least
+    ``ceil(length / page_len)`` pages. Pad rows (``s >= lengths[b]``) get an
+    out-of-bounds page index and are dropped by the scatter, mirroring the
+    dense prefill's drop trick. Attention itself never reads the cache, so
+    the output is identical to :func:`prefill_attention` on the same prompt.
+    """
+    B, S = x.shape[:2]
+    n_pages, plen = arena["k"].shape[:2]
+    nb = block_table.shape[1]
+    q, k, v = _project_qkv(p, x, n_q, n_kv, hd)
+    q = apply_rope(q, positions, rope_theta)
+    k = apply_rope(k, positions, rope_theta)
+    if lengths is None:
+        lengths = jnp.full((B,), S, jnp.int32)
+    lengths = jnp.asarray(lengths, jnp.int32)
+
+    if S >= BLOCKED_ATTN_THRESHOLD and S % _BLOCK_Q == 0 \
+            and S % _BLOCK_K == 0:
+        out = _blocked_attention(q, k, v, positions, hd, 0)
+    else:
+        out = _dense_attention(q, k, v, positions, hd, 0)
+
+    valid = jnp.arange(S)[None, :] < lengths[:, None]             # [B, S]
+    pg_ix = jnp.clip(positions // plen, 0, nb - 1)
+    pg = jnp.where(valid,
+                   block_table[jnp.arange(B)[:, None], pg_ix], n_pages)
+    row = jnp.mod(positions, plen)
+    new_arena = {"k": arena["k"].at[pg, row].set(k, mode="drop"),
+                 "v": arena["v"].at[pg, row].set(v, mode="drop")}
+    return out.astype(x.dtype) @ p["wo"]["w"], new_arena
+
+
+def paged_decode_attention(p, x, arena, block_table, cur_pos, *, n_q: int,
+                           n_kv: int, hd: int, rope_theta: float):
+    """One-token decode against a paged arena through a block table.
+
+    x: [B, 1, d]; cur_pos: [B] per-sequence absolute positions; ``arena``
+    leaves ``[n_pages, page_len, n_kv, hd]``; ``block_table`` ``[B, nb]``.
+    The caller guarantees the page holding row ``cur_pos`` is allocated for
+    every live sequence; idle sequences carry all-zero block-table rows, so
+    their drifting writes land in the reserved scratch page 0 (never read
+    unmasked). Gathers the table's pages into logical row order — row ``t``
+    is absolute position ``t``; full attention never wraps — and applies
+    the exact dense-path score/mask/softmax ops, so on equal logical
+    capacity the output is bit-identical to :func:`decode_attention`.
+    Returns (out [B,1,d], updated arena).
+    """
+    B = x.shape[0]
+    plen = arena["k"].shape[1]
+    nb = block_table.shape[1]
+    q, k, v = _project_qkv(p, x, n_q, n_kv, hd)
+    pos = jnp.asarray(cur_pos, dtype=jnp.int32).reshape(B, 1)
+    q = apply_rope(q, pos, rope_theta)
+    k = apply_rope(k, pos, rope_theta)
+
+    pg = block_table[jnp.arange(B), jnp.clip(pos[:, 0] // plen, 0, nb - 1)]
+    row = jnp.mod(pos[:, 0], plen)
+    new_arena = {"k": arena["k"].at[pg, row].set(k[:, 0]),
+                 "v": arena["v"].at[pg, row].set(v[:, 0])}
+
+    from repro.kernels import ops as K
+    if K.paged_kernel_eligible(n_q=n_q, n_kv=n_kv, hd=hd, page_len=plen):
+        ctx = K.paged_attention_op(q[:, 0], new_arena["k"], new_arena["v"],
+                                   block_table, pos[:, 0])
+        out = ctx.reshape(B, 1, n_q * hd).astype(x.dtype)
+    else:
+        ck = new_arena["k"][block_table].reshape(B, nb * plen, n_kv, hd)
+        cv = new_arena["v"][block_table].reshape(B, nb * plen, n_kv, hd)
+        scores = _gqa_scores(q, ck) / math.sqrt(hd)   # [B,kv,G,1,T]
+        t = jnp.arange(nb * plen)
+        n_fill = jnp.minimum(pos[:, 0] + 1, nb * plen)
+        written = t[None, :] < n_fill[:, None]            # [B, T]
+        scores = jnp.where(written[:, None, None, None, :], scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1)
+        out = _gqa_out(probs, cv).astype(x.dtype)
+    return out @ p["wo"]["w"], new_arena
+
+
 def decode_attention(p, x, cache, cur_pos, *, n_q: int, n_kv: int, hd: int,
                      rope_theta: float, window: int = 0):
     """One-token decode against the cache.

@@ -20,7 +20,8 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.models import sharding
 from repro.models.attention import (attn_init, decode_attention, full_attention,
-                                    init_cache, prefill_attention)
+                                    init_cache, paged_decode_attention,
+                                    paged_prefill_attention, prefill_attention)
 from repro.models.layers import (dense_apply, dense_init, embed_apply,
                                  embed_init, mlp_apply, mlp_init, norm_apply,
                                  norm_init)
@@ -83,6 +84,22 @@ def full_attention_arch(cfg: ModelConfig) -> bool:
         cfg.block_kind(i) == "attn" for i in range(cfg.n_layers))
 
 
+def check_cache_capacity(cfg: ModelConfig, pos: int, n: int, cache_len: int,
+                         what: str = "generation") -> None:
+    """The full-attention capacity rule, shared by every dense serving
+    entry point (sync engine prefill / decode and the launcher loop):
+    ``pos + n`` must not exceed ``cache_len`` or the rolling write would
+    silently evict early prompt context. Windowed / recurrent archs wrap by
+    design and always pass; the paged pool replaces this rule with
+    page-budget admission. Raises ``ValueError`` with the offending spans.
+    """
+    if full_attention_arch(cfg) and pos + n > cache_len:
+        raise ValueError(
+            f"{what} of {n} tokens from position {pos} exceeds cache_len "
+            f"{cache_len} for a full-attention arch (the rolling cache "
+            f"would overwrite prompt context)")
+
+
 def block_apply_full(p, x, positions, cfg: ModelConfig, kind: str):
     """Full-sequence block. Returns (x, aux_loss)."""
     aux = jnp.zeros((), jnp.float32)
@@ -118,10 +135,17 @@ def block_apply_full(p, x, positions, cfg: ModelConfig, kind: str):
     return x, aux
 
 
-def block_apply_decode(p, x, state, cur_pos, cfg: ModelConfig, kind: str):
-    """One-token decode. Returns (x, new_state)."""
+def block_apply_decode(p, x, state, cur_pos, cfg: ModelConfig, kind: str,
+                       block_table=None):
+    """One-token decode. Returns (x, new_state). With ``block_table`` the
+    attention state is a paged arena indexed through the table instead of a
+    dense per-slot rolling cache."""
     h = norm_apply(p["norm1"], x, cfg.norm)
-    if kind == "attn":
+    if kind == "attn" and block_table is not None:
+        mix, new_state = paged_decode_attention(
+            p["mix"], h, state, block_table, cur_pos, n_q=cfg.n_heads,
+            n_kv=cfg.n_kv_heads, hd=cfg.head_dim, rope_theta=cfg.rope_theta)
+    elif kind == "attn":
         mix, new_state = decode_attention(
             p["mix"], h, state, cur_pos, n_q=cfg.n_heads, n_kv=cfg.n_kv_heads,
             hd=cfg.head_dim, rope_theta=cfg.rope_theta,
@@ -146,12 +170,18 @@ def block_apply_decode(p, x, state, cur_pos, cfg: ModelConfig, kind: str):
 
 
 def block_apply_prefill(p, x, positions, state, cfg: ModelConfig, kind: str,
-                        lengths=None):
+                        lengths=None, block_table=None):
     """Full-sequence block that also populates the decode state (KV cache or
     recurrent carry) — one forward instead of S sequential decode steps.
-    Returns (x, new_state)."""
+    Returns (x, new_state). With ``block_table`` the attention rows scatter
+    into a paged arena through the table."""
     h = norm_apply(p["norm1"], x, cfg.norm)
-    if kind == "attn":
+    if kind == "attn" and block_table is not None:
+        mix, new_state = paged_prefill_attention(
+            p["mix"], h, positions, state, block_table, n_q=cfg.n_heads,
+            n_kv=cfg.n_kv_heads, hd=cfg.head_dim, rope_theta=cfg.rope_theta,
+            lengths=lengths)
+    elif kind == "attn":
         mix, new_state = prefill_attention(
             p["mix"], h, positions, state, n_q=cfg.n_heads,
             n_kv=cfg.n_kv_heads, hd=cfg.head_dim, rope_theta=cfg.rope_theta,
@@ -321,12 +351,16 @@ def run_layers(layers, x, positions, cfg: ModelConfig, *, train: bool,
 
 
 def run_layers_decode(layers, x, states, cur_pos, cfg: ModelConfig,
-                      kinds: Optional[Tuple[str, ...]] = None):
-    """One-token decode through a group of layers. Returns (x, new_states)."""
+                      kinds: Optional[Tuple[str, ...]] = None,
+                      block_table=None):
+    """One-token decode through a group of layers. Returns (x, new_states).
+    ``block_table`` (paged serving) is shared by every attention layer —
+    the scan closes over it while the per-layer arenas ride the carry."""
     if cfg.homogeneous:
         def body(h, inp):
             lp, st = inp
-            h, new_st = block_apply_decode(lp, h, st, cur_pos, cfg, "attn")
+            h, new_st = block_apply_decode(lp, h, st, cur_pos, cfg, "attn",
+                                           block_table)
             return h, new_st
         x, new_states = jax.lax.scan(body, x, (layers, states))
         return x, new_states
@@ -334,20 +368,21 @@ def run_layers_decode(layers, x, states, cur_pos, cfg: ModelConfig,
     kinds = kinds or tuple(cfg.block_kind(i) for i in range(len(layers)))
     new_states = []
     for lp, st, kind in zip(layers, states, kinds):
-        x, ns = block_apply_decode(lp, x, st, cur_pos, cfg, kind)
+        x, ns = block_apply_decode(lp, x, st, cur_pos, cfg, kind, block_table)
         new_states.append(ns)
     return x, tuple(new_states)
 
 
 def run_layers_prefill(layers, x, positions, states, cfg: ModelConfig,
-                       kinds: Optional[Tuple[str, ...]] = None, lengths=None):
+                       kinds: Optional[Tuple[str, ...]] = None, lengths=None,
+                       block_table=None):
     """Full-sequence pass through a group of layers that also populates the
     per-layer decode states. Returns (x, new_states)."""
     if cfg.homogeneous:
         def body(h, inp):
             lp, st = inp
             h, ns = block_apply_prefill(lp, h, positions, st, cfg, "attn",
-                                        lengths)
+                                        lengths, block_table)
             return h, ns
         x, new_states = jax.lax.scan(body, x, (layers, states))
         return x, new_states
@@ -355,7 +390,8 @@ def run_layers_prefill(layers, x, positions, states, cfg: ModelConfig,
     kinds = kinds or tuple(cfg.block_kind(i) for i in range(len(layers)))
     new_states = []
     for lp, st, kind in zip(layers, states, kinds):
-        x, ns = block_apply_prefill(lp, x, positions, st, cfg, kind, lengths)
+        x, ns = block_apply_prefill(lp, x, positions, st, cfg, kind, lengths,
+                                    block_table)
         new_states.append(ns)
     return x, tuple(new_states)
 
@@ -377,7 +413,7 @@ def forward(params, tokens, cfg: ModelConfig, *, train: bool = False,
 
 
 def prefill(params, tokens, cfg: ModelConfig, states, lengths=None,
-            embeddings: Optional[jnp.ndarray] = None):
+            embeddings: Optional[jnp.ndarray] = None, block_table=None):
     """Batched full-sequence prefill: run the whole prompt in ONE forward
     pass while populating ``states`` (KV caches scattered at their rolling
     slots, recurrent carries advanced to each row's last real token).
@@ -395,7 +431,8 @@ def prefill(params, tokens, cfg: ModelConfig, states, lengths=None,
     if lengths is not None:
         lengths = jnp.asarray(lengths, jnp.int32)
     x, new_states = run_layers_prefill(params["layers"], x, positions,
-                                       states, cfg, lengths=lengths)
+                                       states, cfg, lengths=lengths,
+                                       block_table=block_table)
     last = (lengths - 1 if lengths is not None
             else jnp.full((B,), S - 1, jnp.int32))
     x = jnp.take_along_axis(x, last[:, None, None], axis=1)       # [B, 1, d]
@@ -404,12 +441,12 @@ def prefill(params, tokens, cfg: ModelConfig, states, lengths=None,
 
 
 def decode_step(params, token, states, cur_pos, cfg: ModelConfig,
-                embeddings: Optional[jnp.ndarray] = None):
+                embeddings: Optional[jnp.ndarray] = None, block_table=None):
     """One new token against the decode state. token: [B,1] (or [B,K,1]
     audio). Returns (logits for the new position, new states)."""
     x = embed_tokens(params, token, cfg, None)
     x, new_states = run_layers_decode(params["layers"], x, states, cur_pos,
-                                      cfg)
+                                      cfg, block_table=block_table)
     x = norm_apply(params["final_norm"], x, cfg.norm)
     return lm_logits(params, x, cfg), new_states
 

@@ -5,7 +5,11 @@
                                 batch); kept for examples/smoke tests.
 ``batcher.ContinuousBatchingEngine`` — slot-pooled continuous batching with
                                 per-request channels and per-slot bottleneck
-                                modes inside one jitted decode step.
+                                modes inside one jitted decode step; a
+                                ``PagedPool`` (block-table paged KV arena
+                                with page-budget admission) by default on
+                                full-attention archs, dense ``SlotPool``
+                                otherwise or with ``paged=False``.
 ``controller.ModeController`` — per-slot, per-tick in-flight mode
                                 re-selection (EWMA + dwell + deadline
                                 escalation) for the continuous engine.
@@ -13,7 +17,9 @@
                                 behind a router with pluggable placement
                                 policies and mmWave-handover handling.
 ``migration``                 — live session migration: ``read_rows`` slot
-                                snapshots, optional wire quantization,
+                                snapshots (dense pools) or ``read_pages``
+                                allocated-pages-only snapshots (paged
+                                pools), optional wire quantization,
                                 bit-exact injection on the target replica.
 ``session``                   — request/queue/session lifecycle records.
 
@@ -22,7 +28,7 @@ docs/cluster.md for the multi-replica router and handover semantics, and
 docs/modes.md for the mode bank and the stats field reference.
 """
 from repro.serving.batcher import (ContinuousBatchingEngine,  # noqa: F401
-                                   SlotPool)
+                                   PagedPool, SlotPool)
 from repro.serving.cluster import (HANDOVER_POLICIES,  # noqa: F401
                                    PLACEMENTS, EdgeCluster,
                                    default_orchestrator)

@@ -40,6 +40,18 @@ next admission. ``host_loop=True`` preserves the legacy synchronous
 per-tick loop (one blocking argmax round-trip per tick) as the measured
 baseline and equivalence oracle — ``tests/test_device_loop.py`` pins the
 two loops token-identical.
+
+For homogeneous full-attention archs the pool is *paged* by default
+(``PagedPool``): KV rows live in fixed ``page_len``-row pages of ONE global
+arena per leaf, each slot maps logical row ``t`` to arena page
+``block_table[slot, t // page_len]``, and admission is page-budget-based —
+a request is admitted when its worst-case page count fits the arena's
+uncommitted pages (long prompts are admissible up to the whole arena, far
+past the dense per-slot ``cache_len``), pages are allocated on demand tick
+by tick, and requests PARK at the queue head under arena pressure instead
+of being rejected. ``paged=False`` forces the dense pool (the legacy
+capacity semantics); on every shape the dense pool can fit, the decoded
+streams are pinned bit-identical between the two (``tests/test_paged.py``).
 """
 from __future__ import annotations
 
@@ -117,6 +129,19 @@ def _admit_scatter(pool_states, positions, cur_tokens, batch_states, slots,
     return new_states, positions, cur_tokens
 
 
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _admit_meta(positions, cur_tokens, slots, pos_vals, first_tokens):
+    """Paged device-resident admission: the prefill already wrote the arena
+    through the group's block tables, so only positions and first tokens
+    scatter (``cur_tokens`` not donated — same pending-read caveat as
+    :func:`_admit_scatter`)."""
+    n = slots.shape[0]
+    positions = positions.at[slots].set(pos_vals)
+    cur_tokens = cur_tokens.at[slots].set(
+        first_tokens[:n].reshape((n,) + cur_tokens.shape[1:]))
+    return positions, cur_tokens
+
+
 def _bucket_len(n: int, lo: int = 8) -> int:
     """Pad ``n`` up to the next power-of-two bucket (>= ``lo``) so the
     jitted prefill sees O(log max_prompt) distinct shapes, not one per
@@ -148,9 +173,75 @@ class _EngineSteps:
         self.mixed_prefill = mixed_prefill
 
 
+def _paged_steps(cfg: ModelConfig, mixed: bool) -> _EngineSteps:
+    """Paged variants of the engine closures: every decode step threads the
+    ``[B, nb]`` block table through to the paged attention path, and
+    prefill writes straight into the (donated) page arena through the
+    group's block tables instead of materializing dense per-row caches.
+    The closures are shape-polymorphic in the table width (pow2-bucketed by
+    the pool), so one set serves every arena size."""
+
+    @jax.jit
+    def mono_step(params, tok, states, pos, bt):
+        return T.decode_step(params, tok, states, pos, cfg, block_table=bt)
+
+    @functools.partial(jax.jit, donate_argnums=(2, 3))
+    def mono_step_dev(params, tok, states, positions, modes_k, bt):
+        def body(carry, _modes):
+            tok, states, positions = carry
+            logits, new_states = T.decode_step(params, tok, states,
+                                               positions, cfg,
+                                               block_table=bt)
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            nxt = nxt.reshape(tok.shape)
+            return (nxt, new_states, positions + 1), nxt
+
+        carry, toks = jax.lax.scan(body, (tok, states, positions), modes_k)
+        return (*carry, toks)
+
+    @functools.partial(jax.jit, donate_argnums=(3,))
+    def mono_prefill(params, toks, lengths, arena, bt):
+        logits, new_arena = T.prefill(params, toks, cfg, arena,
+                                      lengths=lengths, block_table=bt)
+        return jnp.argmax(logits, -1).astype(jnp.int32), new_arena
+
+    if not mixed:
+        return _EngineSteps(mono_step, mono_step_dev, mono_prefill)
+
+    @jax.jit
+    def mixed_step(params, stacked, tok, states, positions, modes, bt):
+        return SP.split_decode_step_mixed(params, stacked, tok, states,
+                                          positions, cfg, modes,
+                                          block_table=bt)
+
+    @functools.partial(jax.jit, donate_argnums=(3, 4))
+    def mixed_step_dev(params, stacked, tok, states, positions, modes_k, bt):
+        def body(carry, modes):
+            tok, states, positions = carry
+            logits, new_states = SP.split_decode_step_mixed(
+                params, stacked, tok, states, positions, cfg, modes,
+                block_table=bt)
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            nxt = nxt.reshape(tok.shape)
+            return (nxt, new_states, positions + 1), nxt
+
+        carry, toks = jax.lax.scan(body, (tok, states, positions), modes_k)
+        return (*carry, toks)
+
+    @functools.partial(jax.jit, donate_argnums=(4,))
+    def mixed_prefill(params, stacked, toks, lengths, arena, modes, bt):
+        logits, new_arena = SP.split_prefill_mixed(
+            params, stacked, toks, arena, cfg, modes, lengths=lengths,
+            block_table=bt)
+        return jnp.argmax(logits, -1).astype(jnp.int32), new_arena
+
+    return _EngineSteps(mono_step, mono_step_dev, mono_prefill,
+                        mixed_step, mixed_step_dev, mixed_prefill)
+
+
 @functools.lru_cache(maxsize=None)
-def _compiled_steps(cfg: ModelConfig, cache_len: int,
-                    mixed: bool) -> _EngineSteps:
+def _compiled_steps(cfg: ModelConfig, cache_len: int, mixed: bool,
+                    paged: bool = False) -> _EngineSteps:
     """Build (once per ``(cfg, cache_len)``) the jitted decode/prefill
     closures every ``ContinuousBatchingEngine`` runs on. Cached at module
     level so N engines of the same configuration — a cluster's replicas,
@@ -159,6 +250,8 @@ def _compiled_steps(cfg: ModelConfig, cache_len: int,
     The closures are pure functions of their arguments (params ride in as
     an argument), so sharing them across engines is sound; donation is a
     per-call property and composes with sharing."""
+    if paged:
+        return _paged_steps(cfg, mixed)
 
     @jax.jit
     def mono_step(params, tok, states, pos):
@@ -235,6 +328,8 @@ def _compiled_steps(cfg: ModelConfig, cache_len: int,
 class SlotPool:
     """Fixed pool of decode slots with recycled cache/recurrent state."""
 
+    paged = False
+
     def __init__(self, cfg: ModelConfig, n_slots: int, cache_len: int):
         self.cfg = cfg
         self.n_slots = n_slots
@@ -251,7 +346,11 @@ class SlotPool:
         return self._free.pop() if self._free else None
 
     def release(self, slot: int):
-        assert slot not in self._free
+        if not 0 <= slot < self.n_slots:
+            raise ValueError(
+                f"slot {slot} out of range [0, {self.n_slots})")
+        if slot in self._free:
+            raise ValueError(f"double release of slot {slot}")
         self.positions[slot] = 0
         self._free.append(slot)
 
@@ -277,6 +376,233 @@ class SlotPool:
                             _slot_axis(self.cfg))
 
 
+@functools.partial(jax.jit, static_argnums=(3,))
+def _gather_pages(arena, bt, used, plen: int):
+    """Gather block-table pages into logical row order: arena leaves
+    ``[L, n_pages + 1, plen, ...]`` + table ``[n, nb]`` -> dense
+    ``[L, n, nb * plen, ...]`` blocks. Chunks at or past each row's
+    allocation (``used``) are zeroed — they point at the scratch page,
+    whose contents are drifting-write junk."""
+    nb = bt.shape[1]
+    keep = jnp.arange(nb)[None, :] < used[:, None]        # [n, nb]
+
+    def take(a):
+        g = a[:, bt]                                      # [L, n, nb, plen, *]
+        m = keep.reshape((1,) + keep.shape + (1,) * (g.ndim - 3))
+        g = jnp.where(m, g, 0)
+        return g.reshape(g.shape[:2] + (nb * g.shape[3],) + g.shape[4:])
+
+    return jax.tree.map(take, arena)
+
+
+@functools.partial(jax.jit, static_argnums=(4,))
+def _scatter_pages(arena, rows, bt, used, plen: int):
+    """The inverse of :func:`_gather_pages`: scatter dense logical-row
+    blocks ``[L, n, nb * plen, ...]`` back through the block table; chunks
+    past a row's allocation get an out-of-bounds page index and drop."""
+    nb = bt.shape[1]
+    keep = jnp.arange(nb)[None, :] < used[:, None]        # [n, nb]
+
+    def put(a, r):
+        rc = r.reshape(r.shape[:2] + (nb, plen) + r.shape[3:])
+        pg = jnp.where(keep, bt, a.shape[1])
+        return a.at[:, pg].set(rc, mode="drop")
+
+    return jax.tree.map(put, arena, rows)
+
+
+@jax.jit
+def _scatter_slot_pages(arena, blocks, bt):
+    """Install one slot's page block ``[L, nbu, plen, ...]`` at its block
+    table's arena pages (the migration inject scatter)."""
+    return jax.tree.map(lambda a, b: a.at[:, bt].set(b), arena, blocks)
+
+
+class PagedPool:
+    """Paged decode-state pool: one global page arena per KV leaf, per-slot
+    block tables, and a page free list.
+
+    The arena holds ``n_pages + 1`` pages of ``page_len`` rows per leaf
+    (``[L, n_pages + 1, page_len, n_kv, hd]``); page 0 is the reserved
+    scratch page — free slots carry all-zero block-table rows, so their
+    drifting decode writes land there and are never read unmasked. Real
+    pages are 1..n_pages. A slot's logical row ``t`` (== absolute position
+    ``t``; full attention never wraps) lives at
+    ``arena[block_np[slot, t // page_len], t % page_len]``.
+
+    Admission-side accounting: ``commit_pages`` reserves a session's
+    worst-case page count up front and ``pages_available`` subtracts every
+    resident session's still-undrawn reservation from the free list, so the
+    engine only admits what on-demand ``alloc_pages`` growth can always
+    satisfy — backpressure parks requests in the queue instead of
+    deadlocking mid-decode.
+    """
+
+    paged = True
+
+    def __init__(self, cfg: ModelConfig, n_slots: int, cache_len: int, *,
+                 page_len: int = 8, n_pages: Optional[int] = None):
+        if not (T.full_attention_arch(cfg) and cfg.homogeneous):
+            raise ValueError(
+                "paged pools need a homogeneous full-attention arch — "
+                "windowed/recurrent decode state is bounded by construction "
+                "and keeps the dense SlotPool")
+        self.cfg = cfg
+        self.n_slots = n_slots
+        self.cache_len = cache_len           # dense-equivalent per-slot rows
+        self.page_len = page_len
+        per_slot = -(-cache_len // page_len)
+        self.n_pages = n_pages if n_pages is not None else n_slots * per_slot
+        #: arena rows — ONE session's max context (it may claim every page)
+        self.capacity = self.n_pages * page_len
+        self.states = T.init_decode_state(cfg, self.n_pages + 1, page_len)
+        self.positions = np.zeros(n_slots, np.int32)
+        self._free = list(range(n_slots - 1, -1, -1))
+        self.block_np = np.zeros((n_slots, self.n_pages), np.int32)
+        self.pages_used = np.zeros(n_slots, np.int32)
+        self._committed = np.zeros(n_slots, np.int32)
+        self._free_pages = list(range(self.n_pages, 0, -1))  # pop -> 1, 2, ..
+        self._free_page_set = set(self._free_pages)
+        self.peak_pages_in_use = 0
+
+    # -- slot lifecycle (the SlotPool contract) -------------------------------
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    def acquire(self) -> Optional[int]:
+        return self._free.pop() if self._free else None
+
+    def release(self, slot: int):
+        if not 0 <= slot < self.n_slots:
+            raise ValueError(
+                f"slot {slot} out of range [0, {self.n_slots})")
+        if slot in self._free:
+            raise ValueError(f"double release of slot {slot}")
+        for i in range(int(self.pages_used[slot])):
+            self._push_free_page(int(self.block_np[slot, i]))
+        self.block_np[slot, :] = 0
+        self.pages_used[slot] = 0
+        self._committed[slot] = 0
+        self.positions[slot] = 0
+        self._free.append(slot)
+
+    # -- page accounting ------------------------------------------------------
+    @property
+    def pages_in_use(self) -> int:
+        return self.n_pages - len(self._free_pages)
+
+    @property
+    def pages_available(self) -> int:
+        """Pages a NEW admission may claim: the free list minus pages
+        already promised (committed) to resident sessions but not drawn."""
+        reserved = int(self._committed.sum()) - int(self.pages_used.sum())
+        return len(self._free_pages) - reserved
+
+    def _push_free_page(self, page: int):
+        if not 1 <= page <= self.n_pages:
+            raise ValueError(
+                f"page {page} out of range [1, {self.n_pages}]")
+        if page in self._free_page_set:
+            raise ValueError(f"double free of page {page}")
+        self._free_pages.append(page)
+        self._free_page_set.add(page)
+
+    def commit_pages(self, slot: int, n_total: int):
+        """Reserve a session's worst-case page count (the engine admits only
+        when :attr:`pages_available` covers it), so later on-demand
+        :meth:`alloc_pages` growth can never exhaust the arena mid-decode."""
+        self._committed[slot] = max(int(n_total), int(self.pages_used[slot]))
+
+    def alloc_pages(self, slot: int, n_rows: int):
+        """Ensure pages covering logical rows ``0..n_rows-1`` are allocated
+        to the slot (idempotent; growth draws from the free list)."""
+        need = -(-max(int(n_rows), 1) // self.page_len)
+        have = int(self.pages_used[slot])
+        if need <= have:
+            return
+        if need - have > len(self._free_pages):
+            raise RuntimeError(
+                f"page arena exhausted: slot {slot} needs {need - have} more "
+                f"pages, {len(self._free_pages)} free (admission commitment "
+                f"accounting should have prevented this)")
+        for i in range(have, need):
+            page = self._free_pages.pop()
+            self._free_page_set.discard(page)
+            self.block_np[slot, i] = page
+        self.pages_used[slot] = need
+        self._committed[slot] = max(int(self._committed[slot]), need)
+        self.peak_pages_in_use = max(self.peak_pages_in_use,
+                                     self.pages_in_use)
+
+    # -- block tables ---------------------------------------------------------
+    def table_width(self) -> int:
+        """Pow2 bucket (>= 1, <= n_pages) covering every slot's allocated
+        pages — the block-table width the compiled steps see, so the decode
+        gather cost tracks the longest LIVE sequence, not the whole arena,
+        and the jit sees O(log n_pages) distinct widths."""
+        hi = max(int(self.pages_used.max()), 1)
+        b = 1
+        while b < hi:
+            b <<= 1
+        return min(b, self.n_pages)
+
+    def block_table(self):
+        """Device copy of the pool block table at the current bucketed width
+        (a fresh buffer per call — never donated; the host-side ``block_np``
+        stays authoritative)."""
+        return jnp.asarray(self.block_np[:, :self.table_width()])
+
+    # -- row/page I/O ---------------------------------------------------------
+    def write_rows(self, batch_states, slots, positions):
+        """Block-table-aware scatter: install dense logical-row blocks
+        ``[L, n, R, ...]`` into each slot's pages, allocating on demand for
+        the given positions — ``write_rows(read_rows(s), s, pos)`` is
+        bit-exact over every allocated page."""
+        R = jax.tree.leaves(batch_states)[0].shape[2]
+        nb = R // self.page_len
+        for s, p in zip(slots, positions):
+            if -(-max(int(p), 1) // self.page_len) > nb:
+                raise ValueError(
+                    f"{R} rows cannot cover position {p} at page_len "
+                    f"{self.page_len}")
+            self.alloc_pages(s, max(int(p), 1))
+            self.positions[s] = int(p)
+        sl = np.asarray(slots, np.int64)
+        self.states = _scatter_pages(
+            self.states, batch_states,
+            jnp.asarray(self.block_np[sl][:, :nb], jnp.int32),
+            jnp.asarray(np.minimum(self.pages_used[sl], nb), jnp.int32),
+            self.page_len)
+
+    def read_rows(self, slots):
+        """The gather inverse of :meth:`write_rows`: each slot's logical
+        rows in order, ``[L, n, table_width() * page_len, ...]`` per leaf,
+        with unallocated chunks zeroed."""
+        sl = np.asarray(slots, np.int64)
+        nb = self.table_width()
+        return _gather_pages(
+            self.states, jnp.asarray(self.block_np[sl][:, :nb], jnp.int32),
+            jnp.asarray(self.pages_used[sl], jnp.int32), self.page_len)
+
+    def read_pages(self, slot: int):
+        """A slot's ALLOCATED pages in block-table order — ``[L, nbu, plen,
+        ...]`` per leaf, the migration payload (pages only, no dense
+        expansion, no scratch junk)."""
+        nbu = max(int(self.pages_used[slot]), 1)
+        bt = jnp.asarray(self.block_np[slot, :nbu], jnp.int32)
+        return jax.tree.map(lambda a: a[:, bt], self.states)
+
+    def write_pages(self, slot: int, blocks, position: int):
+        """Install a migrated-in session's page block (the exact
+        :meth:`read_pages` layout) into freshly allocated local pages."""
+        nbu = jax.tree.leaves(blocks)[0].shape[1]
+        self.alloc_pages(slot, nbu * self.page_len)
+        bt = jnp.asarray(self.block_np[slot, :nbu], jnp.int32)
+        self.states = _scatter_slot_pages(self.states, blocks, bt)
+        self.positions[slot] = int(position)
+
+
 class ContinuousBatchingEngine:
     """Split-inference engine with per-request dynamic bottleneck modes.
 
@@ -293,7 +619,10 @@ class ContinuousBatchingEngine:
                  default_channel: Optional[Channel] = None,
                  max_pending: int = 64,
                  host_loop: bool = False,
-                 max_window: int = 16):
+                 max_window: int = 16,
+                 paged: Optional[bool] = None,
+                 page_len: int = 8,
+                 n_pages: Optional[int] = None):
         if controller is not None:
             if freeze_modes:
                 raise ValueError("controller and freeze_modes are mutually "
@@ -308,7 +637,19 @@ class ContinuousBatchingEngine:
         self.controller = controller
         self.freeze_modes = freeze_modes
         self.default_channel = default_channel
-        self.pool = SlotPool(cfg, n_slots, cache_len)
+        # homogeneous full-attention archs page their KV by default (paged
+        # admission lifts the per-slot cache_len cap to the whole arena);
+        # windowed / recurrent archs keep the dense pool — their decode
+        # state is bounded by construction and has nothing to page
+        paged_ok = T.full_attention_arch(cfg) and cfg.homogeneous
+        self.paged = paged_ok if paged is None else bool(paged)
+        if self.paged and not paged_ok:
+            raise ValueError(
+                "paged=True needs a homogeneous full-attention arch; "
+                "windowed/recurrent decode state is bounded by construction")
+        self.pool = (PagedPool(cfg, n_slots, cache_len, page_len=page_len,
+                               n_pages=n_pages)
+                     if self.paged else SlotPool(cfg, n_slots, cache_len))
         self.queue = RequestQueue(max_pending)
         self.active: Dict[int, Session] = {}          # slot -> session
         self.finished: List[Session] = []
@@ -324,11 +665,15 @@ class ContinuousBatchingEngine:
         self.prefill_padded_tokens = 0  # incl. bucket/batch padding
         self.requests_over_capacity = 0  # rejected: prompt can't fit cache
         self.requests_truncated = 0   # max_new_tokens clipped to cache
-        # full-attention archs must fit prompt + generation in the cache
-        # (see T.full_attention_arch); windowed/recurrent archs are
-        # bounded-state by construction
+        self.requests_parked = 0      # deferred at least once: arena pressure
+        self._parked_rids: set = set()
+        # full-attention archs must fit prompt + generation in the cache —
+        # the whole page arena when paged (one session may claim every
+        # page), the per-slot cache_len when dense; windowed/recurrent
+        # archs are bounded-state by construction
         self.max_context: Optional[int] = (
-            cache_len if T.full_attention_arch(cfg) else None)
+            self.pool.capacity if self.paged
+            else cache_len if T.full_attention_arch(cfg) else None)
         bank = params.get("bneck_modes") or ()
         self.stacked_bank = (bottleneck.bank_stack(bank, cfg.split)
                              if len(bank) else None)
@@ -339,7 +684,7 @@ class ContinuousBatchingEngine:
                            if cfg.frontend == "audio" and cfg.n_codebooks > 1
                            else (n_slots, 1))
         steps = _compiled_steps(cfg, cache_len,
-                                self.stacked_bank is not None)
+                                self.stacked_bank is not None, self.paged)
         self.host_loop = host_loop
         self.max_window = max(int(max_window), 1)
         if not host_loop:
@@ -423,22 +768,41 @@ class ContinuousBatchingEngine:
     def _collect_admits(self) -> List[tuple]:
         admits: List[tuple] = []      # (req, slot, mode, budget, capacity)
         while self.pool.n_free and len(self.queue):
-            req = self.queue.pop()
+            req = self.queue.peek()
             budget = req.max_new_tokens
             if self.max_context is not None:
                 if req.prompt_len > self.max_context:
                     # the prompt alone cannot fit: admitting would wrap the
                     # rolling cache over its own context — reject instead
+                    self.queue.pop()
                     self.requests_over_capacity += 1
                     continue
                 # the first generated token is the prefill argmax (no cache
                 # write); decode writes land at prompt_len..prompt_len+b-2,
-                # so b <= cache_len - prompt_len + 1 never wraps
+                # so b <= max_context - prompt_len + 1 never wraps
                 fit = self.max_context - req.prompt_len + 1
-                if budget > fit:
-                    budget = fit          # session-level clip; the caller's
-                    self.requests_truncated += 1   # Request is not mutated
+                budget = min(budget, fit)  # session-level clip; the caller's
+                #                            Request is not mutated
+            worst = 0
+            if self.paged:
+                # worst-case footprint: prompt rows + every decode write
+                worst = -(-(req.prompt_len + budget - 1)
+                          // self.pool.page_len)
+                if worst > self.pool.pages_available:
+                    # arena backpressure: PARK at the queue head (FIFO)
+                    # until retirements free enough pages, instead of
+                    # rejecting a request the arena could serve later
+                    if req.rid not in self._parked_rids:
+                        self._parked_rids.add(req.rid)
+                        self.requests_parked += 1
+                    break
+            self.queue.pop()
+            if budget < req.max_new_tokens:
+                self.requests_truncated += 1
             slot = self.pool.acquire()
+            if self.paged:
+                self.pool.commit_pages(slot, worst)
+                self.pool.alloc_pages(slot, req.prompt_len)
             if req.channel is None:
                 req.channel = self.default_channel
             mode, cap = 0, None
@@ -473,7 +837,27 @@ class ContinuousBatchingEngine:
             toks[i, ..., :req.prompt_len] = req.prompt
             lens[i] = req.prompt_len
             modes[i] = mode
-        if self._mixed_prefill is not None:
+        if self.paged:
+            # per-row block tables at the bucket's static width (pad rows
+            # get all-zero rows: their one valid position lands in the
+            # scratch page); the prefill scatters prompt K/V straight into
+            # the admit-time-allocated arena pages
+            nb_p = max(-(-blen // self.pool.page_len), 1)
+            bt_np = np.zeros((bp, nb_p), np.int32)
+            for i, (_, slot, _, _, _) in enumerate(group):
+                bt_np[i] = self.pool.block_np[slot, :nb_p]
+            bt = jnp.asarray(bt_np)
+            if self._mixed_prefill is not None:
+                first_dev, new_states = self._mixed_prefill(
+                    self.params, self.stacked_bank, jnp.asarray(toks),
+                    jnp.asarray(lens), self.pool.states,
+                    jnp.asarray(modes), bt)
+            else:
+                first_dev, new_states = self._mono_prefill(
+                    self.params, jnp.asarray(toks), jnp.asarray(lens),
+                    self.pool.states, bt)
+            self.pool.states = new_states      # the updated (donated) arena
+        elif self._mixed_prefill is not None:
             first_dev, new_states = self._mixed_prefill(
                 self.params, self.stacked_bank, jnp.asarray(toks),
                 jnp.asarray(lens), jnp.asarray(modes))
@@ -490,7 +874,18 @@ class ContinuousBatchingEngine:
         now = time.monotonic()
         slots = [a[1] for a in group]
         plens = [a[0].prompt_len for a in group]
-        if self.host_loop:
+        if self.paged:
+            # the prefill already scattered the arena through the block
+            # tables — only positions (and, on the device loop, the
+            # device-resident token/position buffers) remain
+            for s, p in zip(slots, plens):
+                self.pool.positions[s] = p
+            if not self.host_loop:
+                self._positions, self.cur_tokens = _admit_meta(
+                    self._positions, self.cur_tokens,
+                    jnp.asarray(slots, jnp.int32),
+                    jnp.asarray(plens, jnp.int32), first_dev)
+        elif self.host_loop:
             # ONE scatter moves every admitted row into its pool slot
             self.pool.write_rows(new_states, slots, plens)
         else:
@@ -644,12 +1039,29 @@ class ContinuousBatchingEngine:
             return False
 
         modes = self._choose_modes()
+        bt = None
+        if self.paged:
+            # on-demand growth: this tick writes each live slot's row at
+            # its current position
+            for slot in self.active:
+                self.pool.alloc_pages(slot,
+                                      int(self.pool.positions[slot]) + 1)
+            bt = self.pool.block_table()
         positions = jnp.asarray(self.pool.positions)
         toks = jnp.asarray(self.cur_tokens)
         if self._mixed_step is not None:
-            logits, new_states = self._mixed_step(
-                self.params, self.stacked_bank, toks, self.pool.states,
-                positions, jnp.asarray(modes))
+            if bt is not None:
+                logits, new_states = self._mixed_step(
+                    self.params, self.stacked_bank, toks, self.pool.states,
+                    positions, jnp.asarray(modes), bt)
+            else:
+                logits, new_states = self._mixed_step(
+                    self.params, self.stacked_bank, toks, self.pool.states,
+                    positions, jnp.asarray(modes))
+        elif bt is not None:
+            logits, new_states = self._mono_step(self.params, toks,
+                                                 self.pool.states, positions,
+                                                 bt)
         else:                          # no bottleneck bank: raw mode only
             logits, new_states = self._mono_step(self.params, toks,
                                                  self.pool.states, positions)
@@ -719,10 +1131,20 @@ class ContinuousBatchingEngine:
             return False
 
         k = self._window_len()
+        bt = None
+        if self.paged:
+            # the host precomputes the window's page appends exactly like
+            # the [K, B] mode matrix: every row the window will write
+            # (positions pos..pos+k-1 per live slot) gets its page BEFORE
+            # dispatch, and the block table ships as a fresh device copy
+            for slot in self.active:
+                self.pool.alloc_pages(slot,
+                                      int(self.pool.positions[slot]) + k)
+            bt = self.pool.block_table()
         modes_k = np.stack([self._choose_modes(self.tick + i)
                             for i in range(k)])
         prev = self._inflight
-        fut = self._dispatch_device_step(modes_k)
+        fut = self._dispatch_device_step(modes_k, bt)
         # snapshot BEFORE retirement: these sessions each emit one token
         # per window tick, whose values land at the next materialization
         snapshot = sorted(self.active.items())
@@ -756,12 +1178,15 @@ class ContinuousBatchingEngine:
         self.tick += k
         return True
 
-    def _dispatch_device_step(self, modes_k: np.ndarray) -> _cf.Future:
+    def _dispatch_device_step(self, modes_k: np.ndarray,
+                              bt=None) -> _cf.Future:
         """Enqueue one fused decode window on the pipeline worker. The
         closure chains on the previous window's future (single worker =
         FIFO, so ``prev.result()`` never blocks the worker on unfinished
         work); the main thread returns immediately and keeps doing host
-        bookkeeping while XLA executes."""
+        bookkeeping while XLA executes. ``bt`` (paged pools) is the
+        window's frozen block table — a fresh device buffer, never
+        donated."""
         prev, cur = self._future, (self.cur_tokens, self.pool.states,
                                    self._positions)
         modes_dev = jnp.asarray(modes_k)
@@ -772,8 +1197,13 @@ class ContinuousBatchingEngine:
             tok, states, positions = prev.result()[:3] if prev is not None \
                 else cur
             if mixed is not None:
+                if bt is not None:
+                    return mixed(params, stacked, tok, states, positions,
+                                 modes_dev, bt)
                 return mixed(params, stacked, tok, states, positions,
                              modes_dev)
+            if bt is not None:
+                return mono(params, tok, states, positions, modes_dev, bt)
             return mono(params, tok, states, positions, modes_dev)
 
         fut = self._pipeline().submit(work)
@@ -877,6 +1307,10 @@ class ContinuousBatchingEngine:
         self.prefill_calls = self.prefill_tokens = 0
         self.prefill_padded_tokens = 0
         self.requests_over_capacity = self.requests_truncated = 0
+        self.requests_parked = 0
+        self._parked_rids.clear()
+        if self.paged:
+            self.pool.peak_pages_in_use = self.pool.pages_in_use
         self.queue.submitted = self.queue.rejected = 0
 
     def run(self, requests: Optional[List[Request]] = None,
@@ -910,8 +1344,21 @@ class ContinuousBatchingEngine:
         policy = ("adaptive" if self.controller is not None
                   else "frozen" if self.freeze_modes
                   else "per-tick" if self.orch is not None else "static")
+        paged_stats = {}
+        if self.paged:
+            paged_stats = {
+                "page_len": self.pool.page_len,
+                "n_pages": self.pool.n_pages,
+                "pages_in_use": int(self.pool.pages_in_use),
+                "peak_pages_in_use": int(self.pool.peak_pages_in_use),
+                "page_occupancy": (self.pool.peak_pages_in_use
+                                   / max(self.pool.n_pages, 1)),
+                "requests_parked": self.requests_parked,
+            }
         return {
             "mode_policy": policy,
+            "paged": self.paged,
+            **paged_stats,
             "mode_switches": switches,
             "mode_escalations": sum(s.escalations for s in self.finished),
             "deadline_misses": misses,

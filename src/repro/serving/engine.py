@@ -113,13 +113,9 @@ class ServingEngine:
         mid-stream continuation (``pos > 0``) keeps the exact per-token
         decode path."""
         S = tokens.shape[-1]
-        if T.full_attention_arch(self.cfg) and self.pos + S > self.cache_len:
-            # the rolling write (pos % cache_len) would silently evict early
-            # prompt context on a full-attention arch — refuse instead (the
-            # continuous engine's admission rule does the counted version)
-            raise ValueError(
-                f"prompt of {S} tokens at pos {self.pos} exceeds the "
-                f"cache ({self.cache_len}) on a full-attention arch")
+        # the continuous engine's admission rule does the counted version
+        T.check_cache_capacity(self.cfg, self.pos, S, self.cache_len,
+                               what="prompt")
         if self.pos == 0:
             if self._prefill_fn is None:
                 cfg = self.cfg
@@ -142,13 +138,8 @@ class ServingEngine:
                       greedy: bool = True, capacity_bps_fn=None) -> np.ndarray:
         """Generate ``n_steps`` tokens; per-token the orchestrator picks the
         transmit mode from the live channel capacity."""
-        if T.full_attention_arch(self.cfg) and \
-                self.pos + n_steps > self.cache_len:
-            # every decode step writes its KV row at mod(pos, cache_len) —
-            # generating past the cache would wrap over the prompt context
-            raise ValueError(
-                f"{n_steps} decode steps from pos {self.pos} exceed the "
-                f"cache ({self.cache_len}) on a full-attention arch")
+        T.check_cache_capacity(self.cfg, self.pos, n_steps, self.cache_len,
+                               what="decode")
         from repro.core import bottleneck
         tok = first_token
         out: List[np.ndarray] = []

@@ -4,15 +4,27 @@ When a UE crosses a cell boundary mid-generation, its split session's
 decode state lives on the *old* cell's edge server. The choices are to keep
 serving it over a degraded inter-cell path (stay-and-degrade), to restart
 the prompt on the new cell (drop-and-replay), or — this module — to move
-the live decode state: one ``SlotPool.read_rows`` gather extracts the
-slot's per-layer state (KV cache rows, recurrent carries), position, and
-current token as a :class:`MigrationSnapshot`; the snapshot is (optionally)
-quantized for the simulated backhaul wire and charged for transfer
-bytes/latency; and :func:`inject_session` installs it into a free slot on
-the target replica's pool such that the migrated session's remaining
-tokens are **bit-identical** to an unmigrated run (raw snapshots — the
-gather/scatter pair is exact; quantized snapshots trade fidelity for
+the live decode state: one gather extracts the slot's per-layer state,
+position, and current token as a :class:`MigrationSnapshot`; the snapshot
+is (optionally) quantized for the simulated backhaul wire and charged for
+transfer bytes/latency; and :func:`inject_session` installs it into a free
+slot on the target replica's pool such that the migrated session's
+remaining tokens are **bit-identical** to an unmigrated run (raw snapshots
+— the gather/scatter pair is exact; quantized snapshots trade fidelity for
 backhaul bytes, and tests measure both).
+
+Dense pools (``SlotPool``) snapshot via ``read_rows`` — the slot's full
+``[L, 1, cache_len, ...]`` rows. Paged pools (``PagedPool``) ship only the
+session's **allocated pages**: ``PagedPool.read_pages`` gathers the slot's
+block-table entries into ``[L, n_pages_used, page_len, ...]`` blocks in
+block-table (= logical row) order, so the wire never carries the unused
+tail of the arena. Page *ids* don't cross the backhaul — the target
+allocates its own pages from its own free list and ``write_pages`` rebuilds
+the block table — only the page contents and their logical order do.
+Injection on a paged target is admission-equivalent: it re-commits the
+session's worst-case page budget and returns ``False`` (park-and-retry at
+the cluster) when the target arena can't cover it, exactly like
+``_collect_admits`` backpressure.
 
 Orchestration state migrates with the session: the per-link capacity EWMA
 (:class:`~repro.core.orchestrator.LinkState`), the session's
@@ -45,8 +57,8 @@ import numpy as np
 
 from repro.core import quant
 from repro.core.orchestrator import AppRequirement, LinkState
-from repro.serving.batcher import (ContinuousBatchingEngine, _admit_scatter,
-                                   _slot_axis)
+from repro.serving.batcher import (ContinuousBatchingEngine, _admit_meta,
+                                   _admit_scatter, _slot_axis)
 from repro.serving.controller import SlotControl
 from repro.serving.session import Session
 
@@ -74,6 +86,11 @@ class MigrationSnapshot:
     requirement: Optional[AppRequirement] = None
     control: Optional[SlotControl] = None
     source_replica: int = -1
+    #: True when ``wire`` holds allocated page blocks (source pool was a
+    #: ``PagedPool``) rather than dense slot rows; ``page_len`` then records
+    #: the source page geometry so the target can reject a mismatch
+    paged: bool = False
+    page_len: int = 0
 
     @property
     def rid(self) -> Hashable:
@@ -164,7 +181,8 @@ def extract_session(eng: ContinuousBatchingEngine, rid: Hashable, *,
                     bits: int = 0,
                     source_replica: int = -1) -> MigrationSnapshot:
     """Pull a live session off ``eng`` WITH its decode state: gather the
-    slot's state rows (``SlotPool.read_rows``), encode them for the
+    slot's state (``SlotPool.read_rows`` dense rows, or the allocated
+    page blocks via ``PagedPool.read_pages``), encode them for the
     backhaul wire, then detach. The engine keeps running — the extracted
     session simply stops decoding here.
 
@@ -173,7 +191,11 @@ def extract_session(eng: ContinuousBatchingEngine, rid: Hashable, *,
     is not live on this engine.
     """
     slot = _land_and_find(eng, rid)
-    state = eng.pool.read_rows([slot])
+    paged = bool(getattr(eng.pool, "paged", False))
+    if paged:
+        state = eng.pool.read_pages(slot)
+    else:
+        state = eng.pool.read_rows([slot])
     wire, treedef, nbytes = _encode_state(state, bits)
     tok = np.asarray(eng.cur_tokens[slot], np.int32)
     nbytes += int(tok.size) * 4
@@ -182,40 +204,85 @@ def extract_session(eng: ContinuousBatchingEngine, rid: Hashable, *,
                              cur_token=tok, wire=wire, treedef=treedef,
                              bits=bits, nbytes=nbytes, link=link,
                              requirement=requirement, control=control,
-                             source_replica=source_replica)
+                             source_replica=source_replica, paged=paged,
+                             page_len=eng.pool.page_len if paged else 0)
 
 
 def inject_session(eng: ContinuousBatchingEngine,
                    snap: MigrationSnapshot) -> bool:
     """Install a snapshot into a free slot on ``eng``. Returns ``False``
-    (and changes nothing) when the pool is full — the caller queues the
-    snapshot and retries after a retirement frees a slot.
+    (and changes nothing) when the pool is full — or, on a paged target,
+    when the arena cannot cover the session's worst-case remaining page
+    budget — the caller queues the snapshot and retries after a
+    retirement frees slots/pages.
 
-    The scatter is the admission path's own (``write_rows`` on the host
-    loop, the donated ``_admit_scatter`` on the device loop), so an
-    injected raw snapshot is indistinguishable from having decoded every
-    prior token on this engine — the remaining stream is bit-identical.
+    The scatter is the admission path's own (``write_rows``/``write_pages``
+    on the host loop, the donated ``_admit_scatter`` or a synced
+    ``write_pages`` + ``_admit_meta`` on the device loop), so an injected
+    raw snapshot is indistinguishable from having decoded every prior
+    token on this engine — the remaining stream is bit-identical.
     No channel tick is consumed: injection is not an admission, and the
     UE's link realization must continue unbroken across the handover.
     """
+    target_paged = bool(getattr(eng.pool, "paged", False))
+    if snap.paged != target_paged:
+        raise ValueError(
+            f"snapshot pool kind ({'paged' if snap.paged else 'dense'}) "
+            f"does not match target pool "
+            f"({'paged' if target_paged else 'dense'}) — cluster replicas "
+            "must share their pool configuration")
+    if snap.paged and snap.page_len != eng.pool.page_len:
+        raise ValueError(
+            f"snapshot page_len {snap.page_len} does not match target "
+            f"page_len {eng.pool.page_len}")
     if eng.pool.n_free == 0:
         return False
     sess, rid = snap.session, snap.rid
-    state = _decode_state(snap)
-    slot = eng.pool.acquire()
-    if eng.host_loop:
-        eng.pool.write_rows(state, [slot], [snap.position])
-        eng.cur_tokens[slot] = snap.cur_token
+    if snap.paged:
+        # admission-equivalent page budgeting: the migrated session must be
+        # able to finish here, so re-commit its worst-case total pages
+        # (prompt + clipped budget rows; the last generated token writes no
+        # row) before touching the free list — False parks the snapshot at
+        # the cluster until retirements free enough pages
+        plen = eng.pool.page_len
+        budget = sess.gen_budget or sess.request.max_new_tokens
+        worst = -(-(sess.request.prompt_len + budget - 1) // plen)
+        state = _decode_state(snap)
+        nbu = jax.tree.leaves(state)[0].shape[1]
+        worst = max(worst, nbu)
+        if worst > eng.pool.pages_available:
+            return False
+        slot = eng.pool.acquire()
+        eng.pool.commit_pages(slot, worst)
+        if not eng.host_loop:
+            # the resident arena may be donated to an in-flight window —
+            # land it before scattering (same rule as device-loop admission)
+            eng._sync_device_state()
+        eng.pool.write_pages(slot, state, snap.position)
+        if eng.host_loop:
+            eng.cur_tokens[slot] = snap.cur_token
+        else:
+            eng._positions, eng.cur_tokens = _admit_meta(
+                eng._positions, eng.cur_tokens,
+                jnp.asarray([slot], jnp.int32),
+                jnp.asarray([snap.position], jnp.int32),
+                jnp.asarray(snap.cur_token)[None])
     else:
-        # the resident pool may be donated to an in-flight window — land it
-        # before scattering (same rule as device-loop admission)
-        eng._sync_device_state()
-        eng.pool.states, eng._positions, eng.cur_tokens = _admit_scatter(
-            eng.pool.states, eng._positions, eng.cur_tokens, state,
-            jnp.asarray([slot], jnp.int32),
-            jnp.asarray([snap.position], jnp.int32),
-            _slot_axis(eng.cfg), jnp.asarray(snap.cur_token)[None])
-        eng.pool.positions[slot] = snap.position
+        state = _decode_state(snap)
+        slot = eng.pool.acquire()
+        if eng.host_loop:
+            eng.pool.write_rows(state, [slot], [snap.position])
+            eng.cur_tokens[slot] = snap.cur_token
+        else:
+            # the resident pool may be donated to an in-flight window —
+            # land it before scattering (same rule as device-loop admission)
+            eng._sync_device_state()
+            eng.pool.states, eng._positions, eng.cur_tokens = _admit_scatter(
+                eng.pool.states, eng._positions, eng.cur_tokens, state,
+                jnp.asarray([slot], jnp.int32),
+                jnp.asarray([snap.position], jnp.int32),
+                _slot_axis(eng.cfg), jnp.asarray(snap.cur_token)[None])
+            eng.pool.positions[slot] = snap.position
     sess.slot = slot
     eng.active[slot] = sess
     if eng.orch is not None:

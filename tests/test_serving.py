@@ -191,9 +191,12 @@ def test_multi_request_admission_single_call(setup):
 
 
 def test_over_capacity_rejected_and_truncated(setup):
-    """Full-attention archs must never wrap the rolling cache over the
-    prompt: an unfittable prompt is rejected (counted), and a generation
-    budget that would overflow the cache is truncated."""
+    """DENSE full-attention pools must never wrap the rolling cache over
+    the prompt: an unfittable prompt is rejected (counted), and a
+    generation budget that would overflow the cache is truncated.
+    ``paged=False`` pins the legacy per-slot rule — the paged pool (the
+    qwen default) replaces it with arena-wide page-budget admission, which
+    ``tests/test_paged.py`` covers."""
     cfg, params = setup
     rng = np.random.default_rng(2)
     too_long = Request(rid=0, prompt=rng.integers(
@@ -202,7 +205,8 @@ def test_over_capacity_rejected_and_truncated(setup):
         1, cfg.vocab_size, 8).astype(np.int32), max_new_tokens=20)
     exact_fit = Request(rid=2, prompt=rng.integers(
         1, cfg.vocab_size, 16).astype(np.int32), max_new_tokens=3)
-    eng = ContinuousBatchingEngine(params, cfg, n_slots=2, cache_len=16)
+    eng = ContinuousBatchingEngine(params, cfg, n_slots=2, cache_len=16,
+                                   paged=False)
     done = eng.run([too_long, overflow, exact_fit])
     st = eng.stats()
     assert st["requests_over_capacity"] == 1

@@ -11,7 +11,12 @@ Asserts, against the fresh ``bench_serving.py --json`` output:
    must beat the legacy host loop by at least ``MIN_LOOP_SPEEDUP`` (a
    machine-independent in-run ratio: both loops run on the same box in the
    same process);
-3. decode tokens/s must not regress below ``BENCH_TOLERANCE`` x the
+3. ``long_prompt`` — the paged pool must finish EVERY prompt longer than
+   the dense per-slot cache with zero capacity rejections and zero
+   truncation (while the in-run dense control rejects them all), and its
+   decode tokens/s must clear ``BENCH_TOLERANCE`` x the committed
+   baseline's figure;
+4. decode tokens/s must not regress below ``BENCH_TOLERANCE`` x the
    committed baseline (matched per offered-load level, plus the
    device-loop figure). The tolerance is deliberately loose — CI runners
    vary widely in absolute speed; the in-run ratio above is the sharp
@@ -20,10 +25,10 @@ Asserts, against the fresh ``bench_serving.py --json`` output:
 
 And, when a fresh ``bench_cluster.py --json`` artifact is given:
 
-4. ``handover_ab.migration_wins`` — live migration must beat
+5. ``handover_ab.migration_wins`` — live migration must beat
    stay-and-degrade on deadline-miss rate (the edge-cluster subsystem's
    headline claim — an in-run A/B on identical mobility scripts);
-5. cluster scaling sanity: every multi-replica aggregate decode tokens/s
+6. cluster scaling sanity: every multi-replica aggregate decode tokens/s
    must stay above ``SCALE_FLOOR`` x the single-replica figure from the
    same run (adding replicas must never crater throughput), plus the
    usual ``BENCH_TOLERANCE`` regression check against the committed
@@ -117,6 +122,29 @@ def check(new: dict, baseline: dict | None) -> list:
             f"(device {ec['device_loop']['decode_tok_per_s']} vs host "
             f"{ec['host_loop']['decode_tok_per_s']} tok/s)")
 
+    lp = new.get("long_prompt")
+    if lp is None:
+        # CI benches the paged default arch — a silently-missing section
+        # must not un-gate the page-budget admission claim
+        failures.append("long_prompt missing from the bench artifact")
+    else:
+        if lp["over_capacity"] != 0 or lp["truncated"] != 0:
+            failures.append(
+                "paged long-prompt scenario must admit every prompt whole: "
+                f"{lp['over_capacity']} over capacity, "
+                f"{lp['truncated']} truncated")
+        if lp["finished"] != lp["requests"]:
+            failures.append(
+                f"paged long-prompt scenario finished {lp['finished']} of "
+                f"{lp['requests']} requests — parked sessions must drain, "
+                "not starve")
+        if lp["dense_over_capacity"] != lp["requests"]:
+            failures.append(
+                "the dense control engine should reject every "
+                f"longer-than-cache prompt, rejected "
+                f"{lp['dense_over_capacity']} of {lp['requests']} — the "
+                "scenario is not actually exceeding the dense cache")
+
     if baseline is not None:
         base_levels = {l["offered_load_req_per_tick"]: l
                        for l in baseline.get("levels", [])}
@@ -131,6 +159,14 @@ def check(new: dict, baseline: dict | None) -> list:
                     f"{lvl['decode_tok_per_s']} tok/s regressed below "
                     f"{floor:.1f} ({tolerance} x baseline "
                     f"{base['decode_tok_per_s']})")
+        blp = baseline.get("long_prompt")
+        if lp is not None and blp is not None:
+            floor = tolerance * blp["decode_tok_per_s"]
+            if lp["decode_tok_per_s"] < floor:
+                failures.append(
+                    f"paged long-prompt decode {lp['decode_tok_per_s']} "
+                    f"tok/s regressed below {floor:.1f} ({tolerance} x "
+                    f"baseline {blp['decode_tok_per_s']})")
         bec = baseline.get("engine_comparison")
         if ec is not None and bec is not None:
             floor = tolerance * bec["device_loop"]["decode_tok_per_s"]
@@ -154,6 +190,9 @@ def main(argv) -> int:
                    for l in new.get("levels", [])],
         "adaptive_wins": (new.get("channel_trace") or {}).get(
             "adaptive_wins"),
+        "long_prompt": {k: (new.get("long_prompt") or {}).get(k)
+                        for k in ("finished", "requests", "over_capacity",
+                                  "decode_tok_per_s", "page_occupancy")},
     }
     if cluster is not None:
         failures += check_cluster(cluster, baseline)
