@@ -25,6 +25,13 @@ reporting decode tok/s, page-arena occupancy, and how many sessions were
 parked by page-budget backpressure. The ``long_prompt`` JSON section is
 gated by ``tools/check_bench.py``.
 
+``--slot-scaling 1,2,4,8`` adds the mesh-sharded scenario: the slot pool
+grows with the dp mesh factor (``repro.models.sharding.serving_mesh``)
+under a saturating workload, reporting decode tok/s per dp level. dp=1 is
+the unsharded baseline; the ``slot_scaling`` JSON section is gated by
+``tools/check_bench.py`` (all requests finish, sharded tok/s above a
+floor fraction of the baseline).
+
 ``--channel-trace {static,fade,burst}`` adds the paper's dynamic-adaptation
 A/B: every session rides the *same* scripted capacity trace
 (``TraceChannel``) under two mode policies — the in-flight adaptive
@@ -237,6 +244,60 @@ def compare_engine_loops(params, cfg, *, n_slots: int, prompt_len: int,
     return out
 
 
+def run_slot_scaling(params, cfg, *, dps, n_slots_base: int = 2,
+                     prompt_len: int = 4, gen: int = 16) -> dict:
+    """Slot scaling over the ``('dp','mp')`` serving mesh: at each dp the
+    slot pool grows to ``n_slots_base * dp`` (each dp shard hosts the base
+    slot count) and a saturating workload (every request present at tick 0,
+    2x oversubscribed) measures decode tok/s. dp=1 is the unsharded
+    ``mesh=None`` engine — the baseline the gate in
+    ``tools/check_bench.py`` compares the sharded rows against.
+
+    dp values that exceed the visible device count are skipped and listed
+    in ``skipped_dps`` (no silent truncation). On a forced multi-device
+    CPU host the sharded rows mainly pin *correct completion at scale* —
+    the gate floor is intentionally loose; real dp speedups need real
+    accelerators."""
+    from repro.models.sharding import serving_mesh
+    n_dev = len(jax.devices())
+    rows, skipped = [], []
+    for dp in dps:
+        if dp > n_dev:
+            skipped.append(dp)
+            continue
+        n_slots = n_slots_base * dp
+        mesh = serving_mesh(dp, 1) if dp > 1 else None
+        eng = ContinuousBatchingEngine(
+            params, cfg, n_slots=n_slots,
+            cache_len=max(64, prompt_len + gen + 8),
+            orchestrator=default_orchestrator(cfg), mesh=mesh)
+        reqs = make_requests(cfg, 2 * n_slots, prompt_len=prompt_len,
+                             gen=gen, arrival_every=0)
+        eng.warm(reqs[0].prompt)
+        t0 = time.perf_counter()
+        eng.run(reqs)
+        wall = time.perf_counter() - t0
+        st = eng.stats()
+        eng.close()
+        rows.append({
+            "dp": dp,
+            "n_slots": n_slots,
+            "requests": 2 * n_slots,
+            "finished": st["requests_finished"],
+            "decode_tok_per_s": round(
+                st["decode_tokens"] / max(wall, 1e-9), 1),
+            "decode_ticks": st["decode_ticks"],
+            "slot_occupancy": round(
+                st["decode_tokens"]
+                / max(st["decode_ticks"] * n_slots, 1), 3),
+        })
+    if skipped:
+        print(f"slot_scaling: skipped dp={skipped} "
+              f"(only {n_dev} devices visible)")
+    return {"n_slots_base": n_slots_base, "gen": gen,
+            "n_devices": n_dev, "rows": rows, "skipped_dps": skipped}
+
+
 def build_capacity_trace(kind: str, n_ticks: int, hi_bps: float,
                          lo_bps: float, period: int = 8) -> np.ndarray:
     """Scripted capacity traces (bytes/s per tick) for the adaptive-vs-frozen
@@ -398,6 +459,12 @@ def main(argv=None):
                          "decode throughput A/B (0 disables it)")
     ap.add_argument("--compare-gen", type=int, default=24,
                     help="decode tokens per request in the loop A/B")
+    ap.add_argument("--slot-scaling", default=None, metavar="DPS",
+                    help="comma list of dp mesh factors (e.g. 1,2,4,8): "
+                         "run the slot-scaling scenario — tok/s vs "
+                         "n_slots with the pool sharded over dp (needs "
+                         "enough devices; on CPU set XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N)")
     ap.add_argument("--channel-trace", default=None,
                     choices=["static", "fade", "burst"],
                     help="run the adaptive-vs-frozen mode-policy A/B on a "
@@ -468,6 +535,17 @@ def main(argv=None):
               f"device_tok/s={ec['device_loop']['decode_tok_per_s']} "
               f"host_tok/s={ec['host_loop']['decode_tok_per_s']} "
               f"decode_speedup={ec['decode_speedup']}x")
+
+    if args.slot_scaling:
+        sc = run_slot_scaling(
+            params, cfg, dps=[int(s) for s in args.slot_scaling.split(",")],
+            prompt_len=args.prompt_len)
+        out["slot_scaling"] = sc
+        for row in sc["rows"]:
+            print(f"slot_scaling,dp={row['dp']},slots={row['n_slots']},"
+                  f"tok/s={row['decode_tok_per_s']} "
+                  f"finished={row['finished']}/{row['requests']} "
+                  f"occ={row['slot_occupancy']}")
 
     if args.channel_trace:
         tr = run_channel_trace(params, cfg, args.channel_trace,

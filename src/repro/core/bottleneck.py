@@ -102,7 +102,7 @@ def bank_stack(bank, split: SplitConfig):
     }
 
 
-def boundary_mixed(stacked, x, mode_idx, *, dtype=jnp.bfloat16):
+def boundary_mixed(stacked, x, mode_idx, *, dtype=jnp.bfloat16, mesh=None):
     """Per-slot bottleneck at the split boundary inside one jitted step.
 
     x: [B, S, d] boundary activation ([B, 1, d] at decode); mode_idx: [B]
@@ -117,8 +117,15 @@ def boundary_mixed(stacked, x, mode_idx, *, dtype=jnp.bfloat16):
     unaligned widths — it runs the pure-jnp reference
     (``repro.kernels.ref.boundary_mixed_ref``). The two are parity-pinned
     by ``tests/test_kernels.py`` across every calibrated bit width.
+
+    ``mesh``: serving ``('dp','mp')`` mesh — runs the dispatcher per-shard
+    inside a replicated ``shard_map`` region (``ops.boundary_mixed_sharded``)
+    so dp-sharded engine steps stay bit-identical to unsharded ones.
     """
     from repro.kernels import ops
+    if mesh is not None:
+        return ops.boundary_mixed_sharded(stacked, x, mode_idx, mesh,
+                                          dtype=dtype)
     return ops.boundary_mixed_op(stacked, x, mode_idx, dtype=dtype)
 
 

@@ -159,7 +159,8 @@ def split_decode_step(params, token, states, cur_pos, cfg: ModelConfig,
 
 
 def split_decode_step_mixed(params, stacked_bank, token, states, positions,
-                            cfg: ModelConfig, mode_idx, block_table=None):
+                            cfg: ModelConfig, mode_idx, block_table=None,
+                            mesh=None):
     """One decode step for a *mixed-mode* continuous batch.
 
     Unlike :func:`split_decode_step`, every batch slot decodes at its own
@@ -175,7 +176,13 @@ def split_decode_step_mixed(params, stacked_bank, token, states, positions,
     ``bottleneck.mode_payload_bytes(cfg, 1, 1, mode)`` per slot.
     With ``block_table`` ([B, nb] int32, paged serving) the attention
     leaves of ``states`` are page arenas shared by both halves — the layer
-    axis splits exactly like dense stacked leaves. Returns (logits,
+    axis splits exactly like dense stacked leaves.
+
+    ``mesh``: serving ``('dp','mp')`` mesh for the sharded engine — the
+    boundary runs in a replicated ``shard_map`` region (bit-identity with
+    the unsharded step; see ``ops.boundary_mixed_sharded``) and the
+    decoder-side activation is re-constrained batch-over-``dp`` so GSPMD
+    keeps the slot sharding through the decoder half. Returns (logits,
     new_states).
     """
     s = cfg.split.split_at
@@ -186,7 +193,8 @@ def split_decode_step_mixed(params, stacked_bank, token, states, positions,
     x, enc_new = T.run_layers_decode(enc_l, x, enc_st, positions, cfg,
                                      kinds=kinds[:s], block_table=block_table)
     x = bottleneck.boundary_mixed(stacked_bank, x, mode_idx,
-                                  dtype=T.model_dtype(cfg))
+                                  dtype=T.model_dtype(cfg), mesh=mesh)
+    x = sharding.constrain_batch(x, mesh)
     x, dec_new = T.run_layers_decode(dec_l, x, dec_st, positions, cfg,
                                      kinds=kinds[s:], block_table=block_table)
     x = T.norm_apply_final(params, x, cfg)
@@ -258,7 +266,7 @@ def split_prefill(params, tokens, cfg: ModelConfig, states, mode: int = 0, *,
 
 def split_prefill_mixed(params, stacked_bank, tokens, states,
                         cfg: ModelConfig, mode_idx, *, lengths=None,
-                        block_table=None):
+                        block_table=None, mesh=None):
     """Batched multi-request prefill with per-row bottleneck modes: one
     forward over a right-padded prompt batch where row b's boundary
     activations cross the wire through its own admission-chosen mode
@@ -267,9 +275,16 @@ def split_prefill_mixed(params, stacked_bank, tokens, states,
     :func:`split_decode_step_mixed` — quantization happens per boundary
     position with each row's own bit width, exactly as the per-mode path
     does. Returns (last-real-position logits, new_states).
+
+    ``mesh``: serving mesh — the boundary runs replicated-per-shard like
+    the decode step. Prefill inputs arrive replicated (a prompt batch is
+    written into dp-sharded pool rows only afterwards), so no batch
+    constraint is added here: fully-replicated prefill compute keeps the
+    admission path bit-identical to the unsharded engine.
     """
     return _prefill_through(
         params, tokens, cfg, states,
         lambda x: bottleneck.boundary_mixed(stacked_bank, x, mode_idx,
-                                            dtype=T.model_dtype(cfg)),
+                                            dtype=T.model_dtype(cfg),
+                                            mesh=mesh),
         lengths, block_table)

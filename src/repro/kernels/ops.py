@@ -113,6 +113,35 @@ def boundary_mixed_op(stacked, x, mode_idx, *, dtype=jnp.bfloat16,
     return yp[dest].reshape(B, S, d)
 
 
+def boundary_mixed_sharded(stacked, x, mode_idx, mesh, *,
+                           dtype=jnp.bfloat16,
+                           interpret: bool | None = None):
+    """``boundary_mixed_op`` on a serving mesh, run per-shard inside a
+    fully-manual ``shard_map`` region with every operand replicated.
+
+    Replicated-in / replicated-out looks like a no-op, but it is the
+    bit-identity fix: the reference path's batched gather-einsum lowers
+    differently on CPU depending on the (sharded) batch extent, so letting
+    GSPMD partition this op makes a dp-sharded step diverge from the
+    unsharded engine at the last mantissa bits. Pinning the whole boundary
+    to one replicated manual region makes every shard compute the same
+    full-batch result with single-device lowering — the Pallas/CPU dispatch
+    and unaligned fallbacks inside ``boundary_mixed_op`` run per-shard,
+    untouched. A plain ``with_sharding_constraint`` does NOT achieve this
+    (the partitioner still specializes the lowering)."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.models.sharding import shard_map
+
+    fn = shard_map(
+        lambda s, xx, mm: boundary_mixed_op(s, xx, mm, dtype=dtype,
+                                            interpret=interpret),
+        mesh=mesh,
+        in_specs=(jax.tree.map(lambda _: P(), stacked), P(), P()),
+        out_specs=P())
+    return fn(stacked, x, mode_idx)
+
+
 def group_layout(stacked, rmode, block_r: int, block_w: int):
     """Row permutation + per-block tables for the grouped boundary kernel.
 

@@ -12,6 +12,10 @@ paper's Fig. 3/5 loop, runnable end to end).
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b --reduced \
         --engine cluster --replicas 2 --placement best-channel \
         --handover migrate --requests 8 --n-slots 2
+    # mesh-sharded serving: slot pools over dp, decoder heads over mp
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
+        python -m repro.launch.serve --arch qwen2.5-3b --reduced \
+        --engine continuous --requests 16 --n-slots 8 --dp 4 --mp 2
 
 Policies (sync engine):
   orchestrator  paper's dynamic policy (channel + loss feedback, hysteresis)
@@ -36,6 +40,7 @@ from repro.core.channel import (Channel, ChannelConfig, MobilityChannel,
 from repro.core.orchestrator import AppRequirement, ModeProfile, Orchestrator
 from repro.data import tokens
 from repro.models import transformer as T
+from repro.models.sharding import serving_mesh
 from repro.serving import (HANDOVER_POLICIES, PLACEMENTS,
                            ContinuousBatchingEngine, ControllerConfig,
                            EdgeCluster, ModeController, Request,
@@ -55,6 +60,21 @@ def build_orchestrator(cfg, batch: int, latency_budget_s: float,
     return Orchestrator(profiles,
                         AppRequirement(latency_budget_s=latency_budget_s),
                         hysteresis=hysteresis)
+
+
+def _build_mesh(args):
+    """``('dp','mp')`` serving mesh from --dp/--mp, or None (single-device
+    semantics, bit-identical to builds without the flags)."""
+    if not (args.dp or args.mp):
+        return None
+    dp, mp = args.dp or 1, args.mp or 1
+    n_dev = len(jax.devices())
+    if dp * mp > n_dev:
+        raise SystemExit(
+            f"--dp {dp} x --mp {mp} needs {dp * mp} devices but only "
+            f"{n_dev} visible (on CPU set "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count=N)")
+    return serving_mesh(dp, mp)
 
 
 def run_continuous(args, cfg, params):
@@ -80,7 +100,8 @@ def run_continuous(args, cfg, params):
         kw["orchestrator"] = orch
         kw["freeze_modes"] = args.mode_policy == "frozen"
     eng = ContinuousBatchingEngine(params, cfg, n_slots=args.n_slots,
-                                   cache_len=args.cache_len, **kw)
+                                   cache_len=args.cache_len,
+                                   mesh=_build_mesh(args), **kw)
     # warm the compiled prefill/decode paths (every prefill batch bucket)
     # so decode_tok_per_s measures steady-state serving — the sync engine
     # likewise excludes its one-time prefill/trace cost from the decode rate
@@ -124,7 +145,8 @@ def run_cluster(args, cfg, params):
         cache_len=args.cache_len, placement=args.placement,
         handover=args.handover, snapshot_bits=args.snapshot_bits,
         backhaul_bps=args.backhaul_mbps * 1e6 / 8.0,
-        latency_budget_s=args.latency_budget_ms / 1e3)
+        latency_budget_s=args.latency_budget_ms / 1e3,
+        dp=args.dp, mp=args.mp)
     # warm every replica's compiled paths so decode_tok_per_s measures
     # steady-state serving, same as the continuous-engine path
     cluster.warm(np.asarray(batch[0]))
@@ -147,7 +169,8 @@ def run_sync(args, cfg, params):
         orch = build_orchestrator(cfg, args.requests,
                                   args.latency_budget_ms / 1e3)
     eng = ServingEngine(params, cfg, cache_len=args.cache_len,
-                        batch=args.requests, orchestrator=orch)
+                        batch=args.requests, orchestrator=orch,
+                        mesh=_build_mesh(args))
 
     # batched request prompts
     src = tokens.MarkovTokenSource(cfg, seed=7)
@@ -242,6 +265,15 @@ def main(argv=None):
     ap.add_argument("--detach-factor", type=float, default=0.05,
                     help="cluster engine: capacity multiplier while a UE "
                          "is served from the wrong cell")
+    ap.add_argument("--dp", type=int, default=None,
+                    help="serving mesh: data-parallel axis — slot/page "
+                         "pools shard over dp (must divide n_slots; "
+                         "cluster engine: per-replica, replicas get "
+                         "disjoint device subsets)")
+    ap.add_argument("--mp", type=int, default=None,
+                    help="serving mesh: tensor-parallel axis — decoder "
+                         "heads/FFN shard over mp (reassociates "
+                         "reductions; dp alone stays bit-identical)")
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--json-out", default=None)
     args = ap.parse_args(argv)

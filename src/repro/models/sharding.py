@@ -17,6 +17,7 @@ from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None,
@@ -277,6 +278,146 @@ def default_activation_rules(mesh: Mesh, *, seq_shard: bool = True,
     if moe_ep:
         rules["moe_ep"] = True
     return rules
+
+
+# ---------------------------------------------------------------------------
+# serving mesh — ('dp', 'mp') data plane for the continuous-batching engine
+# ---------------------------------------------------------------------------
+#
+# Serving shards differently from training: the batch dim IS the slot pool
+# (thousands of concurrent sessions), so slots shard over ``dp`` while
+# parameters replicate across it; ``mp`` carries megatron tensor parallelism
+# (params + KV head dim). dp-only meshes are bit-identical to single-device
+# execution (slot sharding is pure data placement); mp > 1 reassociates
+# head-dim reductions and is numerically equivalent but not bit-exact — see
+# docs/sharding.md.
+
+#: leaf names (last pytree-path component) holding KV caches shaped
+#: ``[..., slots, T, n_kv, head_dim]``. Exact-component match on purpose:
+#: ``endswith`` would also catch e.g. the rglru ``conv`` state.
+_KV_LEAF_NAMES = frozenset({"k", "v", "k_s", "v_s"})
+
+
+def serving_mesh(dp: int, mp: int = 1, *, devices=None) -> Mesh:
+    """Build the serving ``('dp', 'mp')`` mesh from the first ``dp * mp``
+    devices (or an explicit device subset, e.g. an EdgeCluster replica's
+    slice)."""
+    devices = list(jax.devices() if devices is None else devices)
+    if dp < 1 or mp < 1:
+        raise ValueError(f"mesh axes must be >= 1, got dp={dp} mp={mp}")
+    need = dp * mp
+    if need > len(devices):
+        raise ValueError(
+            f"mesh ({dp} x {mp}) needs {need} devices, only "
+            f"{len(devices)} available — on CPU, set "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=N")
+    arr = np.array(devices[:need], dtype=object).reshape(dp, mp)
+    return Mesh(arr, ("dp", "mp"))
+
+
+def _rename_spec(spec: P, mapping: Dict[Optional[str], Optional[str]]) -> P:
+    out = []
+    for axis in spec:
+        if isinstance(axis, (tuple, list)):
+            renamed = tuple(mapping.get(a, a) for a in axis)
+            renamed = tuple(a for a in renamed if a is not None)
+            axis = renamed if len(renamed) > 1 else (
+                renamed[0] if renamed else None)
+        else:
+            axis = mapping.get(axis, axis)
+        out.append(axis)
+    return P(*out)
+
+
+def serving_param_pspecs(params, mesh: Mesh, **kwargs):
+    """Parameter specs on the serving mesh: TP dims over ``mp``, FSDP dims
+    replicated (every dp row serves every slot, so weights replicate over
+    ``dp``). Reuses the training ``_PARAM_RULES`` via a proxy mesh with the
+    training axis names, then renames ``model -> mp`` / drops ``data``."""
+    proxy = Mesh(mesh.devices, ("data", "model"))
+    specs = param_pspecs(params, proxy, **kwargs)
+    ren = {"data": None, "model": "mp"}
+    return jax.tree.map(lambda s: _rename_spec(s, ren), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _pool_spec(path, shape, mesh: Mesh, slot_axis: int) -> P:
+    spec = [None] * len(shape)
+    if len(shape) > slot_axis:
+        spec[slot_axis] = "dp"
+    last = _path_str(path).split("/")[-1]
+    if last in _KV_LEAF_NAMES and len(shape) == slot_axis + 4:
+        # [..., slots, T, n_kv, head_dim] — head groups over mp
+        spec[slot_axis + 2] = "mp"
+    return _fit_spec(P(*spec), shape, mesh)
+
+
+def pool_pspecs(states, mesh: Mesh, *, slot_axis: int):
+    """Slot-pool specs: slot axis over ``dp``, KV head groups over ``mp``;
+    non-dividing dims fall back to replicated (``_fit_spec``). ``slot_axis``
+    is 1 for stacked homogeneous states ``[L, S, ...]`` and the paged arena
+    ``[L, pages, ...]`` (pages are that pool's slot axis), 0 for
+    heterogeneous per-layer states ``[S, ...]``."""
+    return jax.tree_util.tree_map_with_path(
+        lambda p, leaf: _pool_spec(p, leaf.shape, mesh, slot_axis), states)
+
+
+def pool_shardings(states, mesh: Mesh, *, slot_axis: int):
+    """``NamedSharding`` tree matching ``pool_pspecs`` (handy for
+    ``jax.jit`` in_shardings / ``device_put``)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda p, leaf: NamedSharding(
+            mesh, _pool_spec(p, leaf.shape, mesh, slot_axis)), states)
+
+
+def shard_pool(states, mesh: Mesh, *, slot_axis: int):
+    """Place a slot-pool state tree onto the serving mesh."""
+    return jax.tree_util.tree_map_with_path(
+        lambda p, leaf: jax.device_put(leaf, NamedSharding(
+            mesh, _pool_spec(p, leaf.shape, mesh, slot_axis))), states)
+
+
+def constrain_batch(x, mesh: Optional[Mesh], *, axis: int = 0):
+    """Constrain one array's batch/slot ``axis`` over ``dp`` (no-op when
+    unsharded or non-dividing)."""
+    if mesh is None:
+        return x
+    spec = [None] * x.ndim
+    spec[axis] = "dp"
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, _fit_spec(P(*spec), x.shape, mesh)))
+
+
+def shard_batch(x, mesh: Optional[Mesh], *, axis: int = 0):
+    """``device_put`` one array with its batch/slot ``axis`` over ``dp``
+    (the committed-placement counterpart of :func:`constrain_batch`;
+    no-op when unsharded or non-dividing)."""
+    if mesh is None:
+        return x
+    spec = [None] * x.ndim
+    spec[axis] = "dp"
+    return jax.device_put(
+        x, NamedSharding(mesh, _fit_spec(P(*spec), x.shape, mesh)))
+
+
+def shard_params(params, mesh: Optional[Mesh], **kwargs):
+    """Place a parameter tree with :func:`serving_param_pspecs` shardings
+    (no-op without a mesh)."""
+    if mesh is None:
+        return params
+    specs = serving_param_pspecs(params, mesh, **kwargs)
+    return jax.tree.map(
+        lambda leaf, s: jax.device_put(leaf, NamedSharding(mesh, s)),
+        params, specs)
+
+
+def replicate(tree, mesh: Optional[Mesh]):
+    """Place every leaf fully replicated on the mesh (params/bank in the
+    serving engine; no-op without a mesh)."""
+    if mesh is None:
+        return tree
+    sh = NamedSharding(mesh, P())
+    return jax.tree.map(lambda leaf: jax.device_put(leaf, sh), tree)
 
 
 def state_pspecs(states, mesh: Mesh, batch: int, *, stacked: bool) -> Any:

@@ -52,6 +52,17 @@ by tick, and requests PARK at the queue head under arena pressure instead
 of being rejected. ``paged=False`` forces the dense pool (the legacy
 capacity semantics); on every shape the dense pool can fit, the decoded
 streams are pinned bit-identical between the two (``tests/test_paged.py``).
+
+``mesh`` (a ``models.sharding.serving_mesh`` ``('dp','mp')`` mesh) shards
+the whole data plane: pool state rides slot-over-``dp`` / KV-heads-over-
+``mp`` (``pool_pspecs``), params ride TP-over-``mp`` (replicated over
+``dp``), and the compiled steps — including the donated ``lax.scan``
+device window — run under GSPMD with the bottleneck boundary pinned in a
+replicated ``shard_map`` region. ``mesh=None`` (the default) is the
+single-device engine, byte-for-byte unchanged; a dp-only mesh is pinned
+token-bit-identical to it (``tests/test_sharded_serving.py``); ``mp > 1``
+reassociates head reductions (numerically equivalent, not bit-exact) —
+see ``docs/sharding.md``.
 """
 from __future__ import annotations
 
@@ -70,6 +81,7 @@ from repro.core import bottleneck
 from repro.core import split as SP
 from repro.core.channel import Channel, tx_seconds
 from repro.core.orchestrator import Orchestrator
+from repro.models import sharding
 from repro.models import transformer as T
 from repro.serving.controller import ModeController
 from repro.serving.session import Request, RequestQueue, Session
@@ -81,33 +93,42 @@ def _slot_axis(cfg: ModelConfig) -> int:
     return 1 if cfg.homogeneous else 0
 
 
-def _put_rows(pool_states, batch_states, slots, axis: int):
-    """Scatter rows 0..len(slots)-1 of a batched prefill's state pytree into
-    the pool slots (slots are distinct by construction) — the one shared
-    admission scatter both engine loops build on."""
-    n = slots.shape[0]
+def _put_rows(pool_states, batch_states, idx, axis: int):
+    """Scatter rows 0..len(idx)-1 of a batched state pytree into the pool
+    rows ``idx`` (distinct by construction) — the one shared scatter every
+    admission/inject path builds on."""
+    n = idx.shape[0]
 
     def put(p, b):
         rows = jnp.moveaxis(b, axis, 0)[:n]
-        pb = jnp.moveaxis(p, axis, 0).at[slots].set(rows)
+        pb = jnp.moveaxis(p, axis, 0).at[idx].set(rows)
         return jnp.moveaxis(pb, 0, axis)
 
     return jax.tree.map(put, pool_states, batch_states)
 
 
 @functools.partial(jax.jit, static_argnums=(3,))
-def _scatter_rows(pool_states, batch_states, slots, axis: int):
-    """Host-loop admission: state scatter in ONE dispatch."""
-    return _put_rows(pool_states, batch_states, slots, axis)
+def scatter_rows(pool_states, batch_states, idx, axis: int):
+    """THE pool row scatter, shared by both pools: dense slots
+    (``SlotPool.write_rows``, ``axis = _slot_axis(cfg)``) and arena pages
+    (``PagedPool.write_pages``, ``axis = 1`` — a page is just a row of the
+    page axis). One jitted dispatch; sharding-aware by construction: on a
+    serving mesh the donated/updated pool operand carries its
+    ``pool_pspecs`` sharding and GSPMD keeps ``.at[].set`` output sharding
+    equal to the operand's, so scatters never unshard the pool."""
+    return _put_rows(pool_states, batch_states, idx, axis)
 
 
 @functools.partial(jax.jit, static_argnums=(2,))
-def _gather_rows(pool_states, slots, axis: int):
-    """The inverse of ``_put_rows``: pull the given slots' rows out of the
-    pool as a batched state pytree (batch = ``len(slots)`` on the same
-    axis ``_put_rows``/``write_rows`` scatter on)."""
+def gather_rows(pool_states, idx, axis: int):
+    """The gather inverse of :func:`scatter_rows`, shared the same way
+    (``SlotPool.read_rows`` on the slot axis, ``PagedPool.read_pages`` on
+    the page axis): pull rows ``idx`` out of the pool as a batched state
+    pytree with batch = ``len(idx)`` on ``axis``. Sharded pools gather
+    into fully host-addressable outputs — the migration snapshot path
+    reads them with plain ``np.asarray`` regardless of mesh."""
     def take(p):
-        return jnp.moveaxis(jnp.moveaxis(p, axis, 0)[slots], 0, axis)
+        return jnp.moveaxis(jnp.moveaxis(p, axis, 0)[idx], 0, axis)
 
     return jax.tree.map(take, pool_states)
 
@@ -173,13 +194,15 @@ class _EngineSteps:
         self.mixed_prefill = mixed_prefill
 
 
-def _paged_steps(cfg: ModelConfig, mixed: bool) -> _EngineSteps:
+def _paged_steps(cfg: ModelConfig, mixed: bool,
+                 mesh=None) -> _EngineSteps:
     """Paged variants of the engine closures: every decode step threads the
     ``[B, nb]`` block table through to the paged attention path, and
     prefill writes straight into the (donated) page arena through the
     group's block tables instead of materializing dense per-row caches.
     The closures are shape-polymorphic in the table width (pow2-bucketed by
-    the pool), so one set serves every arena size."""
+    the pool), so one set serves every arena size. ``mesh`` builds the
+    sharded variants (see :func:`_compiled_steps`)."""
 
     @jax.jit
     def mono_step(params, tok, states, pos, bt):
@@ -212,7 +235,7 @@ def _paged_steps(cfg: ModelConfig, mixed: bool) -> _EngineSteps:
     def mixed_step(params, stacked, tok, states, positions, modes, bt):
         return SP.split_decode_step_mixed(params, stacked, tok, states,
                                           positions, cfg, modes,
-                                          block_table=bt)
+                                          block_table=bt, mesh=mesh)
 
     @functools.partial(jax.jit, donate_argnums=(3, 4))
     def mixed_step_dev(params, stacked, tok, states, positions, modes_k, bt):
@@ -220,7 +243,7 @@ def _paged_steps(cfg: ModelConfig, mixed: bool) -> _EngineSteps:
             tok, states, positions = carry
             logits, new_states = SP.split_decode_step_mixed(
                 params, stacked, tok, states, positions, cfg, modes,
-                block_table=bt)
+                block_table=bt, mesh=mesh)
             nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
             nxt = nxt.reshape(tok.shape)
             return (nxt, new_states, positions + 1), nxt
@@ -232,7 +255,7 @@ def _paged_steps(cfg: ModelConfig, mixed: bool) -> _EngineSteps:
     def mixed_prefill(params, stacked, toks, lengths, arena, modes, bt):
         logits, new_arena = SP.split_prefill_mixed(
             params, stacked, toks, arena, cfg, modes, lengths=lengths,
-            block_table=bt)
+            block_table=bt, mesh=mesh)
         return jnp.argmax(logits, -1).astype(jnp.int32), new_arena
 
     return _EngineSteps(mono_step, mono_step_dev, mono_prefill,
@@ -241,7 +264,7 @@ def _paged_steps(cfg: ModelConfig, mixed: bool) -> _EngineSteps:
 
 @functools.lru_cache(maxsize=None)
 def _compiled_steps(cfg: ModelConfig, cache_len: int, mixed: bool,
-                    paged: bool = False) -> _EngineSteps:
+                    paged: bool = False, mesh=None) -> _EngineSteps:
     """Build (once per ``(cfg, cache_len)``) the jitted decode/prefill
     closures every ``ContinuousBatchingEngine`` runs on. Cached at module
     level so N engines of the same configuration — a cluster's replicas,
@@ -249,9 +272,19 @@ def _compiled_steps(cfg: ModelConfig, cache_len: int, mixed: bool,
     and therefore ONE XLA compile cache, instead of re-tracing per engine.
     The closures are pure functions of their arguments (params ride in as
     an argument), so sharing them across engines is sound; donation is a
-    per-call property and composes with sharing."""
+    per-call property and composes with sharing.
+
+    ``mesh`` (hashable, part of the cache key: mesh shape AND device
+    assignment, since the ``shard_map`` boundary region binds concrete
+    devices) builds the mesh-aware variants: the mixed steps thread the
+    mesh into ``split_decode_step_mixed`` / ``split_prefill_mixed``, and
+    sharding of the donated scan carries follows the ``NamedSharding``-
+    annotated inputs the engine places (GSPMD propagates input shardings
+    through the whole step, donation included). Engines on the SAME mesh —
+    e.g. benchmark A/B pairs — still share one compile cache; cluster
+    replicas on disjoint device subsets get one entry each."""
     if paged:
-        return _paged_steps(cfg, mixed)
+        return _paged_steps(cfg, mixed, mesh)
 
     @jax.jit
     def mono_step(params, tok, states, pos):
@@ -297,14 +330,16 @@ def _compiled_steps(cfg: ModelConfig, cache_len: int, mixed: bool,
     @jax.jit
     def mixed_step(params, stacked, tok, states, positions, modes):
         return SP.split_decode_step_mixed(params, stacked, tok,
-                                          states, positions, cfg, modes)
+                                          states, positions, cfg, modes,
+                                          mesh=mesh)
 
     @functools.partial(jax.jit, donate_argnums=(3, 4))
     def mixed_step_dev(params, stacked, tok, states, positions, modes_k):
         def body(carry, modes):
             tok, states, positions = carry
             logits, new_states = SP.split_decode_step_mixed(
-                params, stacked, tok, states, positions, cfg, modes)
+                params, stacked, tok, states, positions, cfg, modes,
+                mesh=mesh)
             nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
             nxt = nxt.reshape(tok.shape)
             return (nxt, new_states, positions + 1), nxt
@@ -318,7 +353,7 @@ def _compiled_steps(cfg: ModelConfig, cache_len: int, mixed: bool,
         states = T.init_decode_state(cfg, toks.shape[0], cache_len)
         logits, new_states = SP.split_prefill_mixed(
             params, stacked, toks, states, cfg, modes,
-            lengths=lengths)
+            lengths=lengths, mesh=mesh)
         return jnp.argmax(logits, -1).astype(jnp.int32), new_states
 
     return _EngineSteps(mono_step, mono_step_dev, mono_prefill,
@@ -326,15 +361,26 @@ def _compiled_steps(cfg: ModelConfig, cache_len: int, mixed: bool,
 
 
 class SlotPool:
-    """Fixed pool of decode slots with recycled cache/recurrent state."""
+    """Fixed pool of decode slots with recycled cache/recurrent state.
+
+    ``mesh``: serving ``('dp','mp')`` mesh — the state tree is placed with
+    ``sharding.pool_pspecs`` (slot axis over ``dp``, KV head groups over
+    ``mp``, non-dividing dims replicated) and every ``read_rows``/
+    ``write_rows`` keeps that placement (the shared jitted gather/scatter
+    preserves operand sharding)."""
 
     paged = False
 
-    def __init__(self, cfg: ModelConfig, n_slots: int, cache_len: int):
+    def __init__(self, cfg: ModelConfig, n_slots: int, cache_len: int, *,
+                 mesh=None):
         self.cfg = cfg
         self.n_slots = n_slots
         self.cache_len = cache_len
+        self.mesh = mesh
         self.states = T.init_decode_state(cfg, n_slots, cache_len)
+        if mesh is not None:
+            self.states = sharding.shard_pool(self.states, mesh,
+                                              slot_axis=_slot_axis(cfg))
         self.positions = np.zeros(n_slots, np.int32)
         self._free = list(range(n_slots - 1, -1, -1))
 
@@ -358,9 +404,9 @@ class SlotPool:
         """Install rows 0..len(slots)-1 of a freshly prefilled batched state
         into the given slots in one scatter (full overwrite — whatever a
         previous occupant left behind is gone)."""
-        self.states = _scatter_rows(self.states, batch_states,
-                                    jnp.asarray(slots, jnp.int32),
-                                    _slot_axis(self.cfg))
+        self.states = scatter_rows(self.states, batch_states,
+                                   jnp.asarray(slots, jnp.int32),
+                                   _slot_axis(self.cfg))
         for s, p in zip(slots, positions):
             self.positions[s] = p
 
@@ -372,8 +418,8 @@ class SlotPool:
         accepts, so ``write_rows(read_rows(s), s, pos)`` is an identity and
         a row read here injects bit-exactly into any same-config pool (the
         live-migration snapshot path)."""
-        return _gather_rows(self.states, jnp.asarray(slots, jnp.int32),
-                            _slot_axis(self.cfg))
+        return gather_rows(self.states, jnp.asarray(slots, jnp.int32),
+                           _slot_axis(self.cfg))
 
 
 @functools.partial(jax.jit, static_argnums=(3,))
@@ -411,13 +457,6 @@ def _scatter_pages(arena, rows, bt, used, plen: int):
     return jax.tree.map(put, arena, rows)
 
 
-@jax.jit
-def _scatter_slot_pages(arena, blocks, bt):
-    """Install one slot's page block ``[L, nbu, plen, ...]`` at its block
-    table's arena pages (the migration inject scatter)."""
-    return jax.tree.map(lambda a, b: a.at[:, bt].set(b), arena, blocks)
-
-
 class PagedPool:
     """Paged decode-state pool: one global page arena per KV leaf, per-slot
     block tables, and a page free list.
@@ -436,12 +475,20 @@ class PagedPool:
     engine only admits what on-demand ``alloc_pages`` growth can always
     satisfy — backpressure parks requests in the queue instead of
     deadlocking mid-decode.
+
+    ``mesh``: serving mesh — the arena shards its PAGE axis over ``dp``
+    (pages are this pool's slot axis) and KV head groups over ``mp``. The
+    arena allocation is padded up to a ``dp``-divisible page count (extra
+    pages never enter the free list, so capacity semantics are unchanged)
+    because the natural ``n_pages + 1`` (scratch page 0 included) is
+    usually odd and would silently fall back to a replicated arena.
     """
 
     paged = True
 
     def __init__(self, cfg: ModelConfig, n_slots: int, cache_len: int, *,
-                 page_len: int = 8, n_pages: Optional[int] = None):
+                 page_len: int = 8, n_pages: Optional[int] = None,
+                 mesh=None):
         if not (T.full_attention_arch(cfg) and cfg.homogeneous):
             raise ValueError(
                 "paged pools need a homogeneous full-attention arch — "
@@ -451,11 +498,18 @@ class PagedPool:
         self.n_slots = n_slots
         self.cache_len = cache_len           # dense-equivalent per-slot rows
         self.page_len = page_len
+        self.mesh = mesh
         per_slot = -(-cache_len // page_len)
         self.n_pages = n_pages if n_pages is not None else n_slots * per_slot
         #: arena rows — ONE session's max context (it may claim every page)
         self.capacity = self.n_pages * page_len
-        self.states = T.init_decode_state(cfg, self.n_pages + 1, page_len)
+        n_arena = self.n_pages + 1
+        if mesh is not None:
+            dp = mesh.shape["dp"]
+            n_arena = -(-n_arena // dp) * dp
+        self.states = T.init_decode_state(cfg, n_arena, page_len)
+        if mesh is not None:
+            self.states = sharding.shard_pool(self.states, mesh, slot_axis=1)
         self.positions = np.zeros(n_slots, np.int32)
         self._free = list(range(n_slots - 1, -1, -1))
         self.block_np = np.zeros((n_slots, self.n_pages), np.int32)
@@ -550,8 +604,10 @@ class PagedPool:
     def block_table(self):
         """Device copy of the pool block table at the current bucketed width
         (a fresh buffer per call — never donated; the host-side ``block_np``
-        stays authoritative)."""
-        return jnp.asarray(self.block_np[:, :self.table_width()])
+        stays authoritative). On a mesh the slot axis rides ``dp`` like
+        every other per-slot decode input."""
+        return sharding.shard_batch(
+            jnp.asarray(self.block_np[:, :self.table_width()]), self.mesh)
 
     # -- row/page I/O ---------------------------------------------------------
     def write_rows(self, batch_states, slots, positions):
@@ -591,7 +647,7 @@ class PagedPool:
         expansion, no scratch junk)."""
         nbu = max(int(self.pages_used[slot]), 1)
         bt = jnp.asarray(self.block_np[slot, :nbu], jnp.int32)
-        return jax.tree.map(lambda a: a[:, bt], self.states)
+        return gather_rows(self.states, bt, 1)
 
     def write_pages(self, slot: int, blocks, position: int):
         """Install a migrated-in session's page block (the exact
@@ -599,7 +655,7 @@ class PagedPool:
         nbu = jax.tree.leaves(blocks)[0].shape[1]
         self.alloc_pages(slot, nbu * self.page_len)
         bt = jnp.asarray(self.block_np[slot, :nbu], jnp.int32)
-        self.states = _scatter_slot_pages(self.states, blocks, bt)
+        self.states = scatter_rows(self.states, blocks, bt, 1)
         self.positions[slot] = int(position)
 
 
@@ -622,7 +678,8 @@ class ContinuousBatchingEngine:
                  max_window: int = 16,
                  paged: Optional[bool] = None,
                  page_len: int = 8,
-                 n_pages: Optional[int] = None):
+                 n_pages: Optional[int] = None,
+                 mesh=None):
         if controller is not None:
             if freeze_modes:
                 raise ValueError("controller and freeze_modes are mutually "
@@ -631,7 +688,10 @@ class ContinuousBatchingEngine:
                 raise ValueError("pass either the controller (which owns its "
                                  "orchestrator) or an orchestrator, not both")
             orchestrator = controller.orch
-        self.params = params
+        # mesh placement first: params ride TP-over-mp (replicated over
+        # dp), so every jitted step below sees committed inputs
+        self.mesh = mesh
+        self.params = sharding.shard_params(params, mesh)
         self.cfg = cfg
         self.orch = orchestrator
         self.controller = controller
@@ -648,8 +708,9 @@ class ContinuousBatchingEngine:
                 "paged=True needs a homogeneous full-attention arch; "
                 "windowed/recurrent decode state is bounded by construction")
         self.pool = (PagedPool(cfg, n_slots, cache_len, page_len=page_len,
-                               n_pages=n_pages)
-                     if self.paged else SlotPool(cfg, n_slots, cache_len))
+                               n_pages=n_pages, mesh=mesh)
+                     if self.paged
+                     else SlotPool(cfg, n_slots, cache_len, mesh=mesh))
         self.queue = RequestQueue(max_pending)
         self.active: Dict[int, Session] = {}          # slot -> session
         self.finished: List[Session] = []
@@ -677,6 +738,10 @@ class ContinuousBatchingEngine:
         bank = params.get("bneck_modes") or ()
         self.stacked_bank = (bottleneck.bank_stack(bank, cfg.split)
                              if len(bank) else None)
+        if self.stacked_bank is not None:
+            # the boundary's shard_map region consumes the bank fully
+            # replicated (every shard runs the full-batch boundary)
+            self.stacked_bank = sharding.replicate(self.stacked_bank, mesh)
         if controller is not None and self.stacked_bank is None:
             raise ValueError("adaptive mode control needs a bottleneck mode "
                              "bank in params (init_split_params)")
@@ -684,7 +749,8 @@ class ContinuousBatchingEngine:
                            if cfg.frontend == "audio" and cfg.n_codebooks > 1
                            else (n_slots, 1))
         steps = _compiled_steps(cfg, cache_len,
-                                self.stacked_bank is not None, self.paged)
+                                self.stacked_bank is not None, self.paged,
+                                mesh)
         self.host_loop = host_loop
         self.max_window = max(int(max_window), 1)
         if not host_loop:
@@ -697,8 +763,10 @@ class ContinuousBatchingEngine:
         # device loop: tokens and positions are device-resident; the host
         # only ever receives small int32 token arrays, one tick late
         self.cur_tokens = (np.zeros(self._tok_shape, np.int32) if host_loop
-                           else jnp.zeros(self._tok_shape, jnp.int32))
-        self._positions = jnp.zeros(n_slots, jnp.int32)
+                           else sharding.shard_batch(
+                               jnp.zeros(self._tok_shape, jnp.int32), mesh))
+        self._positions = sharding.shard_batch(
+            jnp.zeros(n_slots, jnp.int32), mesh)
         #: (snapshot of (slot, session) pairs, step future) for the most
         #: recently dispatched tick — materialized one tick later so the
         #: host<->device sync overlaps the NEXT tick's device compute
@@ -1047,17 +1115,19 @@ class ContinuousBatchingEngine:
                 self.pool.alloc_pages(slot,
                                       int(self.pool.positions[slot]) + 1)
             bt = self.pool.block_table()
-        positions = jnp.asarray(self.pool.positions)
-        toks = jnp.asarray(self.cur_tokens)
+        positions = sharding.shard_batch(jnp.asarray(self.pool.positions),
+                                         self.mesh)
+        toks = sharding.shard_batch(jnp.asarray(self.cur_tokens), self.mesh)
+        modes_dev = sharding.shard_batch(jnp.asarray(modes), self.mesh)
         if self._mixed_step is not None:
             if bt is not None:
                 logits, new_states = self._mixed_step(
                     self.params, self.stacked_bank, toks, self.pool.states,
-                    positions, jnp.asarray(modes), bt)
+                    positions, modes_dev, bt)
             else:
                 logits, new_states = self._mixed_step(
                     self.params, self.stacked_bank, toks, self.pool.states,
-                    positions, jnp.asarray(modes))
+                    positions, modes_dev)
         elif bt is not None:
             logits, new_states = self._mono_step(self.params, toks,
                                                  self.pool.states, positions,
@@ -1189,7 +1259,9 @@ class ContinuousBatchingEngine:
         donated."""
         prev, cur = self._future, (self.cur_tokens, self.pool.states,
                                    self._positions)
-        modes_dev = jnp.asarray(modes_k)
+        # [K, B]: the slot axis is axis 1 inside the window scan
+        modes_dev = sharding.shard_batch(jnp.asarray(modes_k), self.mesh,
+                                         axis=1)
         params, stacked = self.params, self.stacked_bank
         mixed, mono = self._mixed_step_dev, self._mono_step_dev
 

@@ -39,11 +39,20 @@ carry their link EWMA and dwell state across, see ``migration.py``), and —
 since the pipeline executor is per-engine — its own device-loop pipeline
 thread, so N replicas overlap their decode windows instead of serializing
 through one FIFO.
+
+With ``dp``/``mp`` set, replicas additionally map onto DISJOINT device
+subsets: replica ``i`` gets devices ``[i*dp*mp, (i+1)*dp*mp)`` as its own
+``('dp','mp')`` serving mesh (``models.sharding.serving_mesh``), so N
+replicas really do run on N separate slices of the machine instead of
+timesharing device 0. Migration between same-shape meshes stays
+bit-identical: snapshots are host-addressable numpy blocks regardless of
+the source mesh, and inject re-places them onto the target's mesh.
 """
 from __future__ import annotations
 
 from typing import Dict, Hashable, List, Optional, Sequence
 
+import jax
 import numpy as np
 
 from repro.configs.base import ModelConfig
@@ -51,6 +60,7 @@ from repro.core import bottleneck
 from repro.core.channel import MobilityChannel, tx_seconds
 from repro.core.orchestrator import (AppRequirement, ModeProfile,
                                      Orchestrator)
+from repro.models.sharding import serving_mesh
 from repro.serving.batcher import ContinuousBatchingEngine
 from repro.serving.migration import (detach_session, extract_session,
                                      inject_session)
@@ -83,6 +93,11 @@ class EdgeCluster:
     builds an independent :func:`default_orchestrator` per replica. Every
     engine kwarg (``host_loop``, ``max_window``, ``max_pending``, ...)
     passes through ``engine_kwargs``.
+
+    ``dp``/``mp`` give every replica its own ``(dp, mp)`` serving mesh on
+    a disjoint contiguous device block (``devices`` overrides the global
+    ``jax.devices()`` order); both unset keeps the legacy single-device
+    replicas (``mesh=None`` engines).
     """
 
     def __init__(self, params, cfg: ModelConfig, *, n_replicas: int = 2,
@@ -93,6 +108,8 @@ class EdgeCluster:
                  backhaul_bps: float = 1.25e9,
                  latency_budget_s: float = 0.006,
                  make_orchestrator=None, make_controller=None,
+                 dp: Optional[int] = None, mp: Optional[int] = None,
+                 devices=None,
                  **engine_kwargs):
         if placement not in PLACEMENTS:
             raise ValueError(f"placement must be one of {PLACEMENTS}")
@@ -101,6 +118,20 @@ class EdgeCluster:
                 f"handover must be one of {HANDOVER_POLICIES}")
         if n_replicas < 1:
             raise ValueError("need at least one replica")
+        meshes: List = [None] * n_replicas
+        if dp is not None or mp is not None:
+            dp, mp = int(dp or 1), int(mp or 1)
+            devices = list(jax.devices() if devices is None else devices)
+            per = dp * mp
+            if n_replicas * per > len(devices):
+                raise ValueError(
+                    f"{n_replicas} replicas x ({dp} x {mp}) mesh need "
+                    f"{n_replicas * per} devices, only {len(devices)} "
+                    "available — on CPU, set XLA_FLAGS="
+                    "--xla_force_host_platform_device_count=N")
+            meshes = [serving_mesh(dp, mp,
+                                   devices=devices[i * per:(i + 1) * per])
+                      for i in range(n_replicas)]
         self.cfg = cfg
         self.placement = placement
         self.handover = handover
@@ -119,7 +150,8 @@ class EdgeCluster:
                 kw["orchestrator"] = default_orchestrator(cfg,
                                                           latency_budget_s)
             self.replicas.append(ContinuousBatchingEngine(
-                params, cfg, n_slots=n_slots, cache_len=cache_len, **kw))
+                params, cfg, n_slots=n_slots, cache_len=cache_len,
+                mesh=meshes[i], **kw))
         self._rr = 0                       # round-robin cursor
         self._home: Dict[Hashable, int] = {}
         #: snapshots/replays that could not land yet (target pool or queue
@@ -365,9 +397,10 @@ class EdgeCluster:
 
     def warm(self, prompt: np.ndarray, gen: int = 2):
         """Trace every replica's compiled paths before a measured run.
-        Replicas of one cluster share their jitted step objects (see
+        Single-device replicas share their jitted step objects (see
         ``batcher._compiled_steps``), so the first replica pays the XLA
-        compiles and the rest just trace-hit."""
+        compiles and the rest just trace-hit; mesh replicas live on
+        disjoint device subsets and each compile their own steps."""
         for eng in self.replicas:
             eng.warm(np.asarray(prompt), gen=gen)
 

@@ -29,6 +29,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core import split as SP
 from repro.core.orchestrator import Orchestrator
+from repro.models import sharding
 from repro.models import transformer as T
 
 
@@ -59,15 +60,26 @@ class GenStats:
 
 
 class ServingEngine:
+    """``mesh``: optional serving ``('dp','mp')`` mesh — params ride
+    TP-over-``mp``, the batch/state rides slot-over-``dp`` (divisibility
+    permitting); this static-batch engine makes no bit-identity claim
+    (that pinning lives with ``ContinuousBatchingEngine`` in
+    ``tests/test_sharded_serving.py``)."""
+
     def __init__(self, params, cfg: ModelConfig, *, cache_len: int = 512,
                  batch: int = 1,
-                 orchestrator: Optional[Orchestrator] = None):
-        self.params = params
+                 orchestrator: Optional[Orchestrator] = None,
+                 mesh=None):
+        self.mesh = mesh
+        self.params = sharding.shard_params(params, mesh)
         self.cfg = cfg
         self.cache_len = cache_len
         self.batch = batch
         self.orch = orchestrator
         self.states = T.init_decode_state(cfg, batch, cache_len)
+        if mesh is not None:
+            self.states = sharding.shard_pool(
+                self.states, mesh, slot_axis=1 if cfg.homogeneous else 0)
         self.pos = 0
         self._steps: Dict[Optional[int], Callable] = {}
         self._tok_steps: Dict[Optional[int], Callable] = {}
@@ -103,6 +115,10 @@ class ServingEngine:
     def reset(self):
         self.states = T.init_decode_state(self.cfg, self.batch,
                                           self.cache_len)
+        if self.mesh is not None:
+            self.states = sharding.shard_pool(
+                self.states, self.mesh,
+                slot_axis=1 if self.cfg.homogeneous else 0)
         self.pos = 0
         self.stats = GenStats()
 

@@ -41,6 +41,18 @@ row-wise quantized at ``bits`` (codes + one scale per row — the same
 ship raw. ``nbytes`` is the accounted backhaul payload:
 ``quant.payload_bytes`` per leaf plus the position/token header.
 
+The wire format is **mesh-invariant**: on a sharded engine (see
+``docs/sharding.md``) the ``read_rows``/``read_pages`` gathers produce
+fully host-addressable arrays whatever the source pool's ``('dp','mp')``
+placement, ``_encode_state``'s per-leaf ``np.asarray`` serializes them
+into the same host-side blocks a single-device snapshot produces, and
+``_decode_state`` rebuilds uncommitted device arrays that inject into ANY
+target mesh (the target's scatter re-places them under its own pool
+sharding). Snapshots therefore carry no device topology, replicas on
+different device subsets interoperate, and raw snapshots stay bit-exact
+across the migration — same-shape meshes compile the same step, so the
+resumed stream is the unmigrated stream.
+
 The engine-facing functions are deliberately free functions over
 ``ContinuousBatchingEngine`` internals rather than engine methods — the
 cluster router (``serving/cluster.py``) is their only intended caller, and

@@ -16,7 +16,14 @@ Asserts, against the fresh ``bench_serving.py --json`` output:
    truncation (while the in-run dense control rejects them all), and its
    decode tokens/s must clear ``BENCH_TOLERANCE`` x the committed
    baseline's figure;
-4. decode tokens/s must not regress below ``BENCH_TOLERANCE`` x the
+4. ``slot_scaling`` (required when ``REQUIRE_SLOT_SCALING=1`` — the
+   multi-device CI job sets it; absent otherwise since single-device
+   runs cannot produce sharded rows) — every row must finish all its
+   requests, and each dp>1 row's decode tokens/s must clear
+   ``SHARD_FLOOR`` x the dp=1 row from the same run (mesh sharding on a
+   forced-device CPU host must not crater throughput; real speedups
+   need real accelerators);
+5. decode tokens/s must not regress below ``BENCH_TOLERANCE`` x the
    committed baseline (matched per offered-load level, plus the
    device-loop figure). The tolerance is deliberately loose — CI runners
    vary widely in absolute speed; the in-run ratio above is the sharp
@@ -25,17 +32,18 @@ Asserts, against the fresh ``bench_serving.py --json`` output:
 
 And, when a fresh ``bench_cluster.py --json`` artifact is given:
 
-5. ``handover_ab.migration_wins`` — live migration must beat
+6. ``handover_ab.migration_wins`` — live migration must beat
    stay-and-degrade on deadline-miss rate (the edge-cluster subsystem's
    headline claim — an in-run A/B on identical mobility scripts);
-6. cluster scaling sanity: every multi-replica aggregate decode tokens/s
+7. cluster scaling sanity: every multi-replica aggregate decode tokens/s
    must stay above ``SCALE_FLOOR`` x the single-replica figure from the
    same run (adding replicas must never crater throughput), plus the
    usual ``BENCH_TOLERANCE`` regression check against the committed
    baseline's ``cluster`` section.
 
 Environment overrides: ``MIN_LOOP_SPEEDUP`` (default 1.15),
-``BENCH_TOLERANCE`` (default 0.3), ``SCALE_FLOOR`` (default 0.5).
+``BENCH_TOLERANCE`` (default 0.3), ``SCALE_FLOOR`` (default 0.5),
+``SHARD_FLOOR`` (default 0.1), ``REQUIRE_SLOT_SCALING`` (default unset).
 """
 from __future__ import annotations
 
@@ -96,6 +104,45 @@ def check_cluster(cl: dict, baseline: dict | None) -> list:
     return failures
 
 
+def check_slot_scaling(sc: dict | None) -> list:
+    """Gates over the mesh-sharded slot-scaling sweep. Required only when
+    ``REQUIRE_SLOT_SCALING=1`` (the multi-device CI job) — a single-device
+    bench run legitimately has no sharded rows to report."""
+    failures = []
+    shard_floor = float(os.environ.get("SHARD_FLOOR", "0.1"))
+    required = os.environ.get("REQUIRE_SLOT_SCALING") == "1"
+    if sc is None:
+        if required:
+            failures.append("slot_scaling missing from the bench artifact "
+                            "(REQUIRE_SLOT_SCALING=1)")
+        return failures
+    rows = sc.get("rows", [])
+    base = next((r for r in rows if r["dp"] == 1), None)
+    if required and sc.get("skipped_dps"):
+        failures.append(
+            f"slot_scaling skipped dp={sc['skipped_dps']} — the "
+            "multi-device job must run every requested dp level")
+    if base is None:
+        failures.append("slot_scaling sweep has no dp=1 row to anchor "
+                        "the SHARD_FLOOR check")
+        return failures
+    for r in rows:
+        if r["finished"] != r["requests"]:
+            failures.append(
+                f"slot_scaling dp={r['dp']}: finished {r['finished']} of "
+                f"{r['requests']} requests — sharded engines must drain "
+                "the full workload")
+        if r["dp"] > 1:
+            floor = shard_floor * base["decode_tok_per_s"]
+            if r["decode_tok_per_s"] < floor:
+                failures.append(
+                    f"slot_scaling dp={r['dp']}: decode "
+                    f"{r['decode_tok_per_s']} tok/s fell below "
+                    f"{floor:.1f} ({shard_floor} x the dp=1 "
+                    f"{base['decode_tok_per_s']} from the same run)")
+    return failures
+
+
 def check(new: dict, baseline: dict | None) -> list:
     failures = []
     min_speedup = float(os.environ.get("MIN_LOOP_SPEEDUP", "1.15"))
@@ -144,6 +191,8 @@ def check(new: dict, baseline: dict | None) -> list:
                 f"longer-than-cache prompt, rejected "
                 f"{lp['dense_over_capacity']} of {lp['requests']} — the "
                 "scenario is not actually exceeding the dense cache")
+
+    failures += check_slot_scaling(new.get("slot_scaling"))
 
     if baseline is not None:
         base_levels = {l["offered_load_req_per_tick"]: l
@@ -194,6 +243,10 @@ def main(argv) -> int:
                         for k in ("finished", "requests", "over_capacity",
                                   "decode_tok_per_s", "page_occupancy")},
     }
+    if new.get("slot_scaling") is not None:
+        summary["slot_scaling"] = [
+            {k: r[k] for k in ("dp", "n_slots", "decode_tok_per_s")}
+            for r in new["slot_scaling"].get("rows", [])]
     if cluster is not None:
         failures += check_cluster(cluster, baseline)
         summary["migration_wins"] = (cluster.get("handover_ab") or {}).get(
