@@ -17,12 +17,13 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass
-from typing import Dict, Iterator, Tuple
+from typing import Dict, Iterator, Optional, Tuple
 
 import numpy as np
 
 LOOP_METERS = 1300.0
 N_FEATURES = 11
+SAMPLE_SECONDS = 1.0     # dataset sampling interval (~1 Hz in Lumos5G)
 
 
 @dataclass
@@ -44,9 +45,12 @@ def _smooth_field(n_knots: int, length: int, rng, amp: float = 1.0):
     return field / np.sqrt(n_knots)
 
 
-def generate(cfg: Lumos5GConfig = Lumos5GConfig()) -> Dict[str, np.ndarray]:
+def generate(cfg: Optional[Lumos5GConfig] = None) -> Dict[str, np.ndarray]:
     """Returns dict with x [N,T,11] float32, y [N,T] int32 class labels,
     tput [N,T] float32 raw Mbps."""
+    # NOTE: the default must be constructed per call — a dataclass instance
+    # in the signature would be shared and mutable across all callers.
+    cfg = cfg if cfg is not None else Lumos5GConfig()
     rng = np.random.default_rng(cfg.seed)
     total_ticks = cfg.n_samples + cfg.seq_len + 1
 
@@ -105,6 +109,49 @@ def generate(cfg: Lumos5GConfig = Lumos5GConfig()) -> Dict[str, np.ndarray]:
         "y": labels[idx],                              # [N,T]
         "tput": tput[idx].astype(np.float32),
     }
+
+
+def throughput_series_mbps(n_seconds: int, seed: int = 0) -> np.ndarray:
+    """Raw perceived-throughput walk [n_seconds] in Mbps at ~1 Hz.
+
+    This is the un-windowed time series behind ``generate()["tput"]`` —
+    the channel-facing view of the dataset (signal features dropped).
+    """
+    if n_seconds < 1:
+        raise ValueError("n_seconds must be >= 1")
+    data = generate(Lumos5GConfig(n_samples=n_seconds, seq_len=1, seed=seed))
+    return data["tput"][:, 0].astype(np.float64)
+
+
+def capacity_traces_bps(n_ues: int, n_ticks: int, *,
+                        tick_seconds: float = 0.1,
+                        seed: int = 0,
+                        stagger_seconds: float = 30.0) -> np.ndarray:
+    """Per-UE link-capacity traces [n_ues, n_ticks] in **bytes/second**,
+    resampled from the 1 Hz Lumos5G throughput walk to channel ticks.
+
+    Each UE replays a window of one long walk of the loop, offset by a
+    random start time (UEs traverse the same city at different times), so
+    one O(seconds) generation pass serves an arbitrarily large fleet.
+    Linear interpolation bridges the 1 Hz samples down to ``tick_seconds``;
+    Mbps converts to bytes/s via *1e6/8.
+    """
+    if n_ues < 1 or n_ticks < 1:
+        raise ValueError("n_ues and n_ticks must be >= 1")
+    if tick_seconds <= 0:
+        raise ValueError("tick_seconds must be > 0")
+    span_s = n_ticks * tick_seconds
+    need = int(np.ceil(span_s / SAMPLE_SECONDS)) + 2
+    total = max(2 * need, int(np.ceil(stagger_seconds / SAMPLE_SECONDS))
+                * min(n_ues, 128) + need)
+    series = throughput_series_mbps(total, seed=seed)
+    rng = np.random.default_rng(seed + 1)
+    offsets = rng.uniform(0.0, (total - need) * SAMPLE_SECONDS, size=n_ues)
+    # shared source series: one flattened interp covers the whole fleet
+    t = offsets[:, None] + np.arange(n_ticks) * tick_seconds       # seconds
+    sample_t = np.arange(total) * SAMPLE_SECONDS
+    mbps = np.interp(t.ravel(), sample_t, series).reshape(n_ues, n_ticks)
+    return mbps * 1e6 / 8.0
 
 
 def train_test_split(data: Dict[str, np.ndarray], cfg: Lumos5GConfig):

@@ -35,16 +35,19 @@ import numpy as np
 from repro.configs import ARCH_IDS, get_config, get_reduced
 from repro.core import bottleneck
 from repro.core import split as SP
-from repro.core.channel import (Channel, ChannelConfig, MobilityChannel,
-                                channel_fleet)
+from repro.core.channel import (Channel, ChannelConfig, FleetChannel,
+                                MobilityChannel, channel_fleet)
+from repro.data.lumos5g import capacity_traces_bps
 from repro.core.orchestrator import AppRequirement, ModeProfile, Orchestrator
 from repro.data import tokens
 from repro.models import transformer as T
 from repro.models.sharding import serving_mesh
 from repro.serving import (HANDOVER_POLICIES, PLACEMENTS,
+                           Autoscaler, AutoscalerConfig,
                            ContinuousBatchingEngine, ControllerConfig,
-                           EdgeCluster, ModeController, Request,
-                           ServingEngine)
+                           EdgeCluster, FleetLoadConfig, ModeController,
+                           Request, SLOAdmission, SLOAdmissionConfig,
+                           ServingEngine, fleet_requests)
 from repro.training import checkpoint
 
 
@@ -163,6 +166,53 @@ def run_cluster(args, cfg, params):
     }
 
 
+def run_fleet(args, cfg, params):
+    """City-fleet serving: every UE rides one lane of a single vectorized
+    ``FleetChannel`` replaying Lumos5G-resampled capacity traces (no
+    per-UE Python channel objects), arrivals come from a Poisson or
+    heavy-tail renewal process, and the elastic ``EdgeCluster`` applies
+    SLO-driven admission plus replica autoscaling."""
+    n = args.requests
+    traces = capacity_traces_bps(n, 512, seed=args.channel_seed)
+    fleet = FleetChannel(n, traces_bps=traces, cycle=True)
+    load = FleetLoadConfig(arrival=args.arrival,
+                           mean_interarrival_ticks=args.arrival_every,
+                           prompt_len=args.prompt_len,
+                           max_new_tokens=args.gen,
+                           vocab=cfg.vocab_size,
+                           slo_ticks=args.slo_ticks,
+                           seed=args.channel_seed)
+    reqs = fleet_requests(fleet, load)
+    min_payload = min(bottleneck.mode_payload_bytes(cfg, 1, 1, m)
+                      for m in range(cfg.split.n_modes))
+    autoscaler = (Autoscaler(AutoscalerConfig(
+        max_replicas=args.max_replicas)) if args.autoscale else None)
+    cluster = EdgeCluster(
+        params, cfg, n_replicas=args.replicas, n_slots=args.n_slots,
+        cache_len=args.cache_len, placement="least-loaded",
+        latency_budget_s=args.latency_budget_ms / 1e3,
+        admission=SLOAdmission(min_payload, SLOAdmissionConfig(
+            latency_budget_s=args.latency_budget_ms / 1e3)),
+        autoscaler=autoscaler,
+        max_pending=max(n, 64))
+    cluster.warm(reqs[0].prompt)
+    t0 = time.time()
+    done = cluster.run_paced(reqs)
+    wall = time.time() - t0
+    st = cluster.stats()
+    cluster.close()
+    return {
+        "engine": "fleet",
+        "n_ues": n,
+        "arrival": args.arrival,
+        "autoscale": bool(args.autoscale),
+        "decode_tok_per_s": round(st["decode_tokens"] / max(wall, 1e-9), 1),
+        "admission": cluster.admission.stats(),
+        "per_request": [s.result() for s in done[:2]],
+        **st,
+    }
+
+
 def run_sync(args, cfg, params):
     orch = None
     if args.policy == "orchestrator":
@@ -224,7 +274,7 @@ def main(argv=None):
     ap.add_argument("--arch", required=True, choices=ARCH_IDS)
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--engine", default="sync",
-                    choices=["sync", "continuous", "cluster"])
+                    choices=["sync", "continuous", "cluster", "fleet"])
     ap.add_argument("--requests", type=int, default=4,
                     help="number of requests (sync: the batch size)")
     ap.add_argument("--prompt-len", type=int, default=16)
@@ -265,6 +315,17 @@ def main(argv=None):
     ap.add_argument("--detach-factor", type=float, default=0.05,
                     help="cluster engine: capacity multiplier while a UE "
                          "is served from the wrong cell")
+    ap.add_argument("--arrival", default="poisson",
+                    choices=["poisson", "heavy-tail", "burst"],
+                    help="fleet engine: arrival process for the load "
+                         "generator")
+    ap.add_argument("--slo-ticks", type=int, default=96,
+                    help="fleet engine: session SLO in engine ticks "
+                         "(arrival -> finish, queue wait included)")
+    ap.add_argument("--autoscale", action="store_true",
+                    help="fleet engine: attach the replica autoscaler")
+    ap.add_argument("--max-replicas", type=int, default=8,
+                    help="fleet engine: autoscaler ceiling")
     ap.add_argument("--dp", type=int, default=None,
                     help="serving mesh: data-parallel axis — slot/page "
                          "pools shard over dp (must divide n_slots; "
@@ -289,7 +350,7 @@ def main(argv=None):
         print(f"loaded weights from {args.ckpt}")
 
     runner = {"sync": run_sync, "continuous": run_continuous,
-              "cluster": run_cluster}[args.engine]
+              "cluster": run_cluster, "fleet": run_fleet}[args.engine]
     summary = runner(args, cfg, params)
     summary = {"arch": args.arch, **summary}
     print(json.dumps(summary, indent=1, default=str))

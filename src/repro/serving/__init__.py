@@ -15,7 +15,15 @@
                                 escalation) for the continuous engine.
 ``cluster.EdgeCluster``       — N engine replicas (one per simulated cell)
                                 behind a router with pluggable placement
-                                policies and mmWave-handover handling.
+                                policies, mmWave-handover handling, and
+                                elasticity: SLO-driven admission
+                                (``fleet.SLOAdmission``) plus replica
+                                autoscaling (``controller.Autoscaler``)
+                                with migration-drained scale-down.
+``fleet``                     — fleet-scale load generation (Poisson /
+                                heavy-tail arrivals over ``FleetChannel``
+                                lanes) and the predictive SLO admission
+                                gate; see docs/fleet.md.
 ``migration``                 — live session migration: ``read_rows`` slot
                                 snapshots (dense pools) or ``read_pages``
                                 allocated-pages-only snapshots (paged
@@ -32,8 +40,12 @@ from repro.serving.batcher import (ContinuousBatchingEngine,  # noqa: F401
 from repro.serving.cluster import (HANDOVER_POLICIES,  # noqa: F401
                                    PLACEMENTS, EdgeCluster,
                                    default_orchestrator)
-from repro.serving.controller import (ControllerConfig,  # noqa: F401
+from repro.serving.controller import (Autoscaler,  # noqa: F401
+                                      AutoscalerConfig, ControllerConfig,
                                       ModeController, SlotControl)
+from repro.serving.fleet import (FleetLoadConfig,  # noqa: F401
+                                 SLOAdmission, SLOAdmissionConfig,
+                                 arrival_ticks, fleet_requests)
 from repro.serving.engine import GenStats, ServingEngine  # noqa: F401
 from repro.serving.migration import (MigrationSnapshot,  # noqa: F401
                                      detach_session, extract_session,

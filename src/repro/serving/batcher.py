@@ -68,6 +68,7 @@ from __future__ import annotations
 
 import concurrent.futures as _cf
 import functools
+import heapq
 import time
 import weakref
 from typing import Dict, List, Optional, Tuple
@@ -787,7 +788,12 @@ class ContinuousBatchingEngine:
         #: lifetime can never interleave with another's. ``close()`` (or
         #: the context manager) shuts it down.
         self._exec: Optional[_cf.ThreadPoolExecutor] = None
-        self._pending: List[Request] = []             # not yet "arrived"
+        #: not-yet-"arrived" requests as a min-heap on (arrival_tick, seq):
+        #: a fleet-scale load script submits thousands of future arrivals
+        #: up front, so the per-tick due-scan and the idle-skip peek must
+        #: be O(log n)/O(1), not O(n) list scans
+        self._pending: List[Tuple[int, int, Request]] = []
+        self._pending_seq = 0                         # FIFO tiebreak
 
         self._mono_step = steps.mono_step
         self._mono_step_dev = steps.mono_step_dev
@@ -802,15 +808,17 @@ class ContinuousBatchingEngine:
         admission queue rejected it (back-pressure)."""
         req.t_submit = time.monotonic()
         if req.arrival_tick > self.tick:
-            self._pending.append(req)
+            heapq.heappush(self._pending,
+                           (req.arrival_tick, self._pending_seq, req))
+            self._pending_seq += 1
             return True
         return self.queue.submit(req)
 
     def _deliver_arrivals(self):
-        due = [r for r in self._pending if r.arrival_tick <= self.tick]
-        self._pending = [r for r in self._pending
-                         if r.arrival_tick > self.tick]
-        for r in sorted(due, key=lambda r: r.arrival_tick):
+        # heap order == (arrival_tick, submission order): identical to the
+        # old sort-by-arrival_tick drain (Python sorts are stable)
+        while self._pending and self._pending[0][0] <= self.tick:
+            r = heapq.heappop(self._pending)[2]
             r.t_submit = time.monotonic()
             self.queue.submit(r)
 
@@ -1102,7 +1110,7 @@ class ContinuousBatchingEngine:
         self._admit()
         if not self.active:
             if self._pending:          # idle until the next arrival
-                self.tick = min(r.arrival_tick for r in self._pending)
+                self.tick = self._pending[0][0]
                 return True
             return False
 
@@ -1171,8 +1179,7 @@ class ContinuousBatchingEngine:
                   for sess in self.active.values())
         k = max(rem, 1)
         if self._pending:
-            k = min(k, max(min(r.arrival_tick for r in self._pending)
-                           - self.tick, 1))
+            k = min(k, max(self._pending[0][0] - self.tick, 1))
         k = min(k, self.max_window)
         return 1 << (k.bit_length() - 1)
 
@@ -1196,7 +1203,7 @@ class ContinuousBatchingEngine:
             self._materialize_inflight()
             self._sync_device_state()
             if self._pending:          # idle until the next arrival
-                self.tick = min(r.arrival_tick for r in self._pending)
+                self.tick = self._pending[0][0]
                 return True
             return False
 

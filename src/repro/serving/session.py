@@ -29,6 +29,12 @@ class Request:
     requirement: Optional[AppRequirement] = None
     arrival_tick: int = 0              # engine tick at which the UE submits
     t_submit: float = 0.0              # wall-clock stamp (set by the engine)
+    #: session-level SLO in engine ticks: the request should FINISH within
+    #: this many ticks of its arrival (queue wait included). ``None`` means
+    #: no session SLO — only the per-token latency budget applies. The
+    #: fleet admission gate predicts against it and the cluster counts a
+    #: session-SLO miss when finished_tick - arrival_tick exceeds it.
+    slo_ticks: Optional[int] = None
 
     @property
     def prompt_len(self) -> int:

@@ -1,0 +1,226 @@
+"""Autoscaler unit tests + elastic-cluster integration.
+
+The pure controller: scale-up fires only on SUSTAINED pressure, decisions
+are deterministic, cooldown and min/max clamps hold. The cluster side:
+scale-down retires a replica without stranding its live sessions (they
+drain out through the migration path and still finish), and scale-up
+reuses the module-level compiled-step cache so adding a replica never
+pays an XLA recompile.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.core import split as SP
+from repro.serving import (Autoscaler, AutoscalerConfig, EdgeCluster,
+                           Request)
+from repro.serving.batcher import _compiled_steps
+
+ARCH = "qwen2.5-3b"
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = get_reduced(ARCH)
+    return cfg, SP.init_split_params(jax.random.PRNGKey(0), cfg)
+
+
+def _prompt(cfg, n=4, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.integers(1, cfg.vocab_size, size=n).astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# pure controller logic
+# ---------------------------------------------------------------------------
+
+def test_scale_up_requires_sustained_pressure():
+    a = Autoscaler(AutoscalerConfig(sustain_ticks=3, cooldown_ticks=5))
+    # two hot ticks then cool: no decision (transient spike damped)
+    assert a.observe(n_replicas=1, occupancy=0.95) == 0
+    assert a.observe(n_replicas=1, occupancy=0.95) == 0
+    assert a.observe(n_replicas=1, occupancy=0.1) == 0
+    # the EMA cools slowly; keep feeding idle until pressure clears, then
+    # three consecutive hot ticks fire exactly one scale-up
+    for _ in range(10):
+        a.observe(n_replicas=1, occupancy=0.0)
+    a2 = Autoscaler(AutoscalerConfig(sustain_ticks=3, cooldown_ticks=5))
+    got = [a2.observe(n_replicas=1, occupancy=0.95) for _ in range(3)]
+    assert got == [0, 0, 1]
+    assert a2.events[-1][1] == +1
+
+
+def test_queue_and_miss_pressure_also_fire():
+    for kw, reason in ((dict(occupancy=0.1, queue_per_slot=5.0), "queue"),
+                       (dict(occupancy=0.1, miss_rate=0.5), "miss_rate")):
+        a = Autoscaler(AutoscalerConfig(sustain_ticks=2, cooldown_ticks=2))
+        got = [a.observe(n_replicas=1, **kw) for _ in range(2)]
+        assert got == [0, 1]
+        assert a.events[-1][2] == reason
+
+
+def test_cooldown_suppresses_consecutive_decisions():
+    a = Autoscaler(AutoscalerConfig(sustain_ticks=1, cooldown_ticks=4))
+    got = [a.observe(n_replicas=1, occupancy=0.99) for _ in range(10)]
+    # one decision, then >= cooldown_ticks of silence before the next
+    ups = [i for i, d in enumerate(got) if d == 1]
+    assert len(ups) >= 2
+    assert ups[1] - ups[0] > 4
+
+
+def test_scale_down_on_sustained_idle_and_min_clamp():
+    a = Autoscaler(AutoscalerConfig(sustain_ticks=2, cooldown_ticks=0,
+                                    min_replicas=2))
+    got = [a.observe(n_replicas=3, occupancy=0.0) for _ in range(2)]
+    assert got == [0, -1]
+    # at min_replicas: never goes lower
+    b = Autoscaler(AutoscalerConfig(sustain_ticks=2, cooldown_ticks=0,
+                                    min_replicas=2))
+    assert all(b.observe(n_replicas=2, occupancy=0.0) == 0
+               for _ in range(10))
+
+
+def test_max_clamp():
+    a = Autoscaler(AutoscalerConfig(sustain_ticks=1, cooldown_ticks=0,
+                                    max_replicas=2))
+    assert all(a.observe(n_replicas=2, occupancy=0.99) == 0
+               for _ in range(10))
+
+
+def test_relaxation_requires_all_signals_quiet():
+    a = Autoscaler(AutoscalerConfig(sustain_ticks=2, cooldown_ticks=0))
+    # idle occupancy but a backlog: not a scale-down candidate
+    got = [a.observe(n_replicas=2, occupancy=0.0, queue_per_slot=0.5)
+           for _ in range(6)]
+    assert all(d == 0 for d in got)
+
+
+def test_decisions_deterministic():
+    rng = np.random.default_rng(3)
+    obs = [dict(n_replicas=2, occupancy=float(o), queue_per_slot=float(q),
+                miss_rate=float(m))
+           for o, q, m in zip(rng.uniform(0, 1, 64),
+                              rng.uniform(0, 2, 64),
+                              rng.uniform(0, 0.2, 64))]
+    a = Autoscaler(AutoscalerConfig(sustain_ticks=2, cooldown_ticks=3))
+    b = Autoscaler(AutoscalerConfig(sustain_ticks=2, cooldown_ticks=3))
+    assert [a.observe(**o) for o in obs] == [b.observe(**o) for o in obs]
+    assert a.events == b.events
+
+
+def test_config_validation():
+    with pytest.raises(ValueError):
+        Autoscaler(AutoscalerConfig(min_replicas=0))
+    with pytest.raises(ValueError):
+        Autoscaler(AutoscalerConfig(min_replicas=3, max_replicas=2))
+
+
+# ---------------------------------------------------------------------------
+# elastic cluster integration
+# ---------------------------------------------------------------------------
+
+def test_scale_up_reuses_compiled_steps(model):
+    cfg, params = model
+    with EdgeCluster(params, cfg, n_replicas=1, n_slots=2,
+                     cache_len=32) as cluster:
+        cluster.warm(_prompt(cfg))
+        info = _compiled_steps.cache_info()
+        idx = cluster.scale_up()
+        after = _compiled_steps.cache_info()
+        # the new replica's engine construction must HIT the module-level
+        # cache (same cfg/cache_len/mesh key): no new compile entry
+        assert after.misses == info.misses
+        assert after.hits > info.hits
+        assert idx == 1 and cluster.n_live == 2
+        # and it serves: run a request routed to the new replica
+        done = cluster.run([Request(rid=0, prompt=_prompt(cfg),
+                                    max_new_tokens=4)])
+        assert len(done) == 1 and len(done[0].tokens) == 4
+
+
+def test_scale_down_drains_via_migration_without_stranding(model):
+    cfg, params = model
+    with EdgeCluster(params, cfg, n_replicas=2, n_slots=2,
+                     cache_len=64, max_window=2) as cluster:
+        cluster.warm(_prompt(cfg))
+        reqs = [Request(rid=i, prompt=_prompt(cfg, seed=i),
+                        max_new_tokens=12) for i in range(4)]
+        for r in reqs:
+            cluster.submit(r)
+        # let sessions start decoding on both replicas (window capped at 2
+        # ticks so the 12-token budgets are still mid-flight here)
+        for _ in range(2):
+            cluster.step()
+        assert any(cluster.replicas[1].active.values())
+        retired = cluster.scale_down(1)
+        assert retired == 1 and 1 in cluster.retired
+        done = cluster.run([])               # drain to completion
+        assert len(done) == 4                # nobody stranded
+        assert cluster.replicas[1].active == {}
+        assert cluster.migrations >= 1       # drained THROUGH migration
+        migrated = [s for s in done
+                    if any(m["from_replica"] == 1 for m in s.migrations)]
+        assert migrated, "retired replica's sessions must have moved"
+        for s in done:
+            assert len(s.tokens) == 12
+        st = cluster.stats()
+        c = st["conservation"]
+        assert c["submitted"] == c["finished"] == 4
+        assert c["in_flight"] == 0
+
+
+def test_retired_replica_gets_no_new_work(model):
+    cfg, params = model
+    with EdgeCluster(params, cfg, n_replicas=2, n_slots=2,
+                     cache_len=32) as cluster:
+        cluster.scale_down(0)
+        for i in range(4):
+            cluster.submit(Request(rid=i, prompt=_prompt(cfg, seed=i),
+                                   max_new_tokens=3))
+        assert cluster._load(cluster.replicas[0]) == 0
+        assert cluster._load(cluster.replicas[1]) == 4
+        done = cluster.run([])
+        assert len(done) == 4
+
+
+def test_scale_up_revives_drained_retired_replica(model):
+    cfg, params = model
+    with EdgeCluster(params, cfg, n_replicas=2, n_slots=2,
+                     cache_len=32) as cluster:
+        assert cluster.scale_down(1) == 1
+        # empty retired replica revives in place of building a third engine
+        assert cluster.scale_up() == 1
+        assert cluster.retired == set()
+        assert len(cluster.replicas) == 2
+
+
+def test_cluster_autoscales_under_load(model):
+    """End-to-end determinism: a seeded fleet through an autoscaled
+    cluster produces identical scale events and token streams run-to-run,
+    and the autoscaler actually grows the cluster under backlog."""
+    cfg, params = model
+
+    def _run():
+        auto = Autoscaler(AutoscalerConfig(
+            max_replicas=3, sustain_ticks=2, cooldown_ticks=4,
+            high_occupancy=0.7))
+        cluster = EdgeCluster(params, cfg, n_replicas=1, n_slots=2,
+                              cache_len=32, autoscaler=auto,
+                              max_pending=64)
+        with cluster:
+            cluster.warm(_prompt(cfg))
+            reqs = [Request(rid=i, prompt=_prompt(cfg, seed=i),
+                            max_new_tokens=6, arrival_tick=i // 4)
+                    for i in range(12)]
+            done = cluster.run_paced(reqs)
+            return (sorted((s.request.rid, tuple(s.tokens)) for s in done),
+                    list(cluster.scale_events), cluster.stats())
+
+    t1, ev1, st1 = _run()
+    t2, ev2, st2 = _run()
+    assert t1 == t2
+    assert ev1 == ev2
+    assert st1["scale_ups"] >= 1
+    assert len(t1) == 12
+    assert st1["conservation"]["in_flight"] == 0

@@ -1,0 +1,119 @@
+"""Smoke/regression coverage for the synthetic Lumos5G twin.
+
+Shapes, units, determinism, the per-call config default (a shared mutable
+dataclass default in ``generate``'s signature was a latent bug), and the
+channel-tick resampler that feeds ``FleetChannel`` trace mode.
+"""
+import numpy as np
+import pytest
+
+from repro.data.lumos5g import (Lumos5GConfig, N_FEATURES, batch_iterator,
+                                capacity_traces_bps, generate,
+                                throughput_series_mbps, train_test_split)
+
+SMALL = Lumos5GConfig(n_samples=256, seq_len=20, n_classes=3, seed=0)
+
+
+def test_generate_shapes_dtypes_and_units():
+    data = generate(SMALL)
+    n, t = SMALL.n_samples, SMALL.seq_len
+    assert data["x"].shape == (n, t, N_FEATURES)
+    assert data["y"].shape == (n, t)
+    assert data["tput"].shape == (n, t)
+    assert data["x"].dtype == np.float32
+    assert data["y"].dtype == np.int32
+    assert data["tput"].dtype == np.float32
+    # throughput is Mbps, clipped to the dataset's published range
+    assert float(data["tput"].min()) >= 1.0
+    assert float(data["tput"].max()) <= 2200.0
+    # labels are valid class ids and every class appears
+    assert set(np.unique(data["y"])) == set(range(SMALL.n_classes))
+    # features are normalized
+    flat = data["x"].reshape(-1, N_FEATURES).astype(np.float64)
+    assert np.abs(flat.mean(0)).max() < 0.5
+    assert np.abs(flat.std(0) - 1.0).max() < 0.5
+
+
+def test_generate_windows_are_consecutive_slices():
+    data = generate(SMALL)
+    # window i+1 is window i shifted by one sample
+    assert np.array_equal(data["tput"][1:, :-1], data["tput"][:-1, 1:])
+    assert np.array_equal(data["y"][1:, :-1], data["y"][:-1, 1:])
+
+
+def test_generate_deterministic_and_default_cfg_not_shared():
+    a = generate(SMALL)
+    b = generate(SMALL)
+    for k in a:
+        assert np.array_equal(a[k], b[k])
+    # default-config calls construct a fresh config each time: equal
+    # results, and a caller mutating its own config can't poison others
+    small = Lumos5GConfig(n_samples=64)
+    c = generate(small)
+    small.n_samples = 3          # mutate caller copy after the fact
+    d = generate(Lumos5GConfig(n_samples=64))
+    for k in c:
+        assert np.array_equal(c[k], d[k])
+
+
+def test_train_test_split_partitions():
+    data = generate(SMALL)
+    tr, te = train_test_split(data, SMALL)
+    n = SMALL.n_samples
+    assert te["x"].shape[0] == int(n * SMALL.test_frac)
+    assert tr["x"].shape[0] + te["x"].shape[0] == n
+    for k in data:
+        assert tr[k].shape[1:] == data[k].shape[1:]
+        assert te[k].shape[1:] == data[k].shape[1:]
+
+
+def test_batch_iterator_shapes():
+    data = generate(SMALL)
+    it = batch_iterator(data, batch_size=8, seed=1)
+    batch = next(it)
+    assert batch["x"].shape == (8, SMALL.seq_len, N_FEATURES)
+    assert batch["y"].shape == (8, SMALL.seq_len)
+
+
+def test_throughput_series_units_and_length():
+    s = throughput_series_mbps(300, seed=2)
+    assert s.shape == (300,)
+    assert s.min() >= 1.0 and s.max() <= 2200.0
+    assert s.std() > 0.0                       # it actually varies
+    with pytest.raises(ValueError):
+        throughput_series_mbps(0)
+
+
+def test_capacity_traces_resample_to_channel_ticks():
+    n_ues, n_ticks, tick_s = 16, 120, 0.1
+    traces = capacity_traces_bps(n_ues, n_ticks, tick_seconds=tick_s, seed=3)
+    assert traces.shape == (n_ues, n_ticks)
+    # Mbps -> bytes/s: the clip range [1, 2200] Mbps maps to
+    # [1.25e5, 2.75e8] bytes/s; interpolation cannot exceed sample bounds
+    assert traces.min() >= 1.0 * 1e6 / 8.0
+    assert traces.max() <= 2200.0 * 1e6 / 8.0
+    # deterministic, and UEs get distinct windows of the walk
+    again = capacity_traces_bps(n_ues, n_ticks, tick_seconds=tick_s, seed=3)
+    assert np.array_equal(traces, again)
+    assert not np.array_equal(traces[0], traces[1])
+    # sub-second ticks interpolate smoothly: adjacent ticks (0.1 s apart)
+    # move far less than the full dynamic range
+    step = np.abs(np.diff(traces, axis=1)).max()
+    assert step < (traces.max() - traces.min())
+
+
+def test_capacity_traces_validation():
+    with pytest.raises(ValueError):
+        capacity_traces_bps(0, 10)
+    with pytest.raises(ValueError):
+        capacity_traces_bps(2, 0)
+    with pytest.raises(ValueError):
+        capacity_traces_bps(2, 10, tick_seconds=0.0)
+
+
+def test_capacity_traces_feed_fleet_channel():
+    from repro.core.channel import FleetChannel
+    traces = capacity_traces_bps(8, 50, seed=4)
+    fleet = FleetChannel(8, traces_bps=traces, cycle=True)
+    got = np.stack([fleet.step_all() for _ in range(50)]).T
+    assert np.array_equal(got, traces)

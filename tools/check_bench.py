@@ -1,6 +1,7 @@
 """CI gate over the serving benchmark artifacts (stdlib only).
 
-    python tools/check_bench.py NEW.json [BASELINE.json] [CLUSTER_NEW.json]
+    python tools/check_bench.py NEW.json [BASELINE.json] \
+        [CLUSTER_NEW.json] [FLEET_NEW.json]
 
 Asserts, against the fresh ``bench_serving.py --json`` output:
 
@@ -41,9 +42,27 @@ And, when a fresh ``bench_cluster.py --json`` artifact is given:
    usual ``BENCH_TOLERANCE`` regression check against the committed
    baseline's ``cluster`` section.
 
+And, when a fresh ``bench_fleet.py --json`` artifact is given (MANDATORY
+whenever the committed baseline carries a ``fleet`` section — a missing
+artifact must fail, not silently un-gate city-scale serving):
+
+8. ``autoscale_ab.autoscaler_wins`` — at equal aggregate slots the
+   autoscaled cluster must beat the statically-provisioned one on
+   session-SLO miss rate (the elasticity subsystem's headline claim —
+   an in-run A/B on identical flash-crowd arrival scripts);
+9. fleet scaling sanity: every row of the UE scaling curve must
+   terminate its whole fleet (finished + rejected == ues), and decode
+   tokens/s at every level must stay above ``FLEET_FLOOR`` x the
+   smallest fleet's figure from the same run (monotone-ish: more
+   offered load must never crater the served rate), plus the usual
+   ``BENCH_TOLERANCE`` regression check against the committed
+   baseline's ``fleet.scaling`` rows.
+
 Environment overrides: ``MIN_LOOP_SPEEDUP`` (default 1.15),
 ``BENCH_TOLERANCE`` (default 0.3), ``SCALE_FLOOR`` (default 0.5),
-``SHARD_FLOOR`` (default 0.1), ``REQUIRE_SLOT_SCALING`` (default unset).
+``FLEET_FLOOR`` (default 0.5), ``SHARD_FLOOR`` (default 0.1),
+``REQUIRE_SLOT_SCALING`` (default unset), ``FLEET_OPTIONAL`` (default
+unset — set to 1 in jobs that legitimately skip the fleet bench).
 """
 from __future__ import annotations
 
@@ -99,6 +118,71 @@ def check_cluster(cl: dict, baseline: dict | None) -> list:
                 failures.append(
                     f"{s['replicas']}-replica decode "
                     f"{s['decode_tok_per_s']} tok/s regressed below "
+                    f"{floor:.1f} ({tolerance} x baseline "
+                    f"{base['decode_tok_per_s']})")
+    return failures
+
+
+def check_fleet(fl: dict | None, baseline: dict | None) -> list:
+    """Gates over the ``bench_fleet.py`` artifact. The committed
+    baseline's ``fleet`` section makes the artifact mandatory — city-scale
+    serving must stay gated once it has ever been benchmarked."""
+    failures = []
+    fleet_floor = float(os.environ.get("FLEET_FLOOR", "0.5"))
+    tolerance = float(os.environ.get("BENCH_TOLERANCE", "0.3"))
+    base_fl = (baseline or {}).get("fleet")
+    if fl is None:
+        # FLEET_OPTIONAL=1 is for jobs that legitimately never run the
+        # fleet bench (e.g. the forced-multi-device sweep); everywhere
+        # else a baselined fleet section makes the artifact mandatory
+        if base_fl is not None \
+                and os.environ.get("FLEET_OPTIONAL") != "1":
+            failures.append("fleet artifact missing but the committed "
+                            "baseline has a fleet section — run "
+                            "bench_fleet.py and pass its JSON "
+                            "(or set FLEET_OPTIONAL=1)")
+        return failures
+
+    ab = fl.get("autoscale_ab")
+    if ab is None:
+        failures.append("autoscale_ab missing from the fleet artifact")
+    elif not ab.get("autoscaler_wins"):
+        failures.append(
+            "autoscaled cluster must beat the equal-aggregate-slot fixed "
+            "baseline on session-SLO miss rate: "
+            f"autoscaled {ab.get('autoscaled')} vs fixed {ab.get('fixed')}")
+
+    scaling = fl.get("scaling") or []
+    if not scaling:
+        failures.append("UE scaling curve missing from the fleet artifact")
+    else:
+        anchor = scaling[0]
+        floor = fleet_floor * anchor["decode_tok_per_s"]
+        for row in scaling:
+            if row["finished"] + row["rejected"] != row["ues"]:
+                failures.append(
+                    f"fleet ues={row['ues']}: finished {row['finished']} "
+                    f"+ rejected {row['rejected']} != {row['ues']} — "
+                    "every UE must terminate exactly once")
+            if row["ues"] > anchor["ues"] \
+                    and row["decode_tok_per_s"] < floor:
+                failures.append(
+                    f"fleet ues={row['ues']}: decode "
+                    f"{row['decode_tok_per_s']} tok/s fell below "
+                    f"{floor:.1f} ({fleet_floor} x the {anchor['ues']}-UE "
+                    f"{anchor['decode_tok_per_s']} from the same run) — "
+                    "offered load must not crater the served rate")
+    if base_fl is not None:
+        base_rows = {r["ues"]: r for r in base_fl.get("scaling", [])}
+        for row in scaling:
+            base = base_rows.get(row["ues"])
+            if base is None:
+                continue
+            floor = tolerance * base["decode_tok_per_s"]
+            if row["decode_tok_per_s"] < floor:
+                failures.append(
+                    f"fleet ues={row['ues']}: decode "
+                    f"{row['decode_tok_per_s']} tok/s regressed below "
                     f"{floor:.1f} ({tolerance} x baseline "
                     f"{base['decode_tok_per_s']})")
     return failures
@@ -231,7 +315,9 @@ def main(argv) -> int:
     new = json.load(open(argv[1]))
     baseline = json.load(open(argv[2])) if len(argv) > 2 else None
     cluster = json.load(open(argv[3])) if len(argv) > 3 else None
+    fleet = json.load(open(argv[4])) if len(argv) > 4 else None
     failures = check(new, baseline)
+    failures += check_fleet(fleet, baseline)
     summary = {
         "engine_comparison": new.get("engine_comparison"),
         "levels": [{k: l[k] for k in ("offered_load_req_per_tick",
@@ -254,6 +340,13 @@ def main(argv) -> int:
         summary["scaling"] = [{k: s[k] for k in ("replicas",
                                                  "decode_tok_per_s")}
                               for s in cluster.get("scaling", [])]
+    if fleet is not None:
+        summary["autoscaler_wins"] = (fleet.get("autoscale_ab") or {}).get(
+            "autoscaler_wins")
+        summary["fleet_scaling"] = [
+            {k: r[k] for k in ("ues", "decode_tok_per_s",
+                               "session_slo_miss_rate")}
+            for r in fleet.get("scaling", [])]
     print(json.dumps(summary, indent=1))
     for f in failures:
         print(f"BENCH CHECK FAILED: {f}", file=sys.stderr)
