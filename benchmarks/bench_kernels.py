@@ -76,17 +76,68 @@ def run() -> Dict:
                  and jnp.max(jnp.abs(y_i.astype(jnp.float32)
                                      - y_r.astype(jnp.float32))) < 0.05)
 
+    # fused decode tail vs the unfused per-tick chain it replaced. The
+    # legacy window body ran the boundary op, then final-norm + LM-head
+    # logits, then argmax as separately dispatched computations with the
+    # full [B,1,V] f32 logits materialized between them; the megakernel
+    # path runs boundary + tail (norm, head gather, argmax) as one
+    # dispatch emitting only int32 tokens. On CPU both sides time the jnp
+    # reference expressions — the delta is dispatch + logits-buffer
+    # traffic, which is exactly what the serving tick pays per window.
+    V = 4096
+    heads = (0.05 * jax.random.normal(key, (1, d, V))).astype(jnp.bfloat16)
+    nscale = jnp.ones((d,), jnp.bfloat16)
+
+    def _norm_logits(x, scale, h):
+        xf = x.astype(jnp.float32)
+        y = xf * jax.lax.rsqrt(
+            jnp.mean(xf * xf, axis=-1, keepdims=True) + 1e-6)
+        y = (y * scale.astype(jnp.float32)).astype(x.dtype)
+        return jnp.einsum("bsd,dv->bsv", y.astype(jnp.float32),
+                          h[0].astype(jnp.float32))
+
+    chain_a = jax.jit(lambda s, x, m: ops.boundary_mixed_op(s, x, m))
+    chain_b = jax.jit(_norm_logits)
+    chain_c = jax.jit(lambda lg: jnp.argmax(lg, axis=-1).astype(jnp.int32))
+
+    def unfused(s, x, m):
+        y = chain_a(s, x, m)
+        jax.block_until_ready(y)         # separate dispatch boundary
+        lg = chain_b(y, nscale, heads)
+        jax.block_until_ready(lg)        # full logits materialized
+        return chain_c(lg)
+
+    fused = jax.jit(lambda s, x, m: ops.decode_tail_op(
+        ops.boundary_mixed_op(s, x, m), nscale, None, heads))
+    us_unfused = _time(unfused, stacked, xb, modes)
+    us_fused = _time(fused, stacked, xb, modes)
+    mega_ok = bool(jnp.array_equal(unfused(stacked, xb, modes),
+                                   fused(stacked, xb, modes)))
+
     raw_bytes = M * K * 2                          # boundary bf16
     wire_bytes = M * N * 1 + M * 2                 # int8 + scales
     return {
         "bottleneck_quant_us": us_bq, "dequant_matmul_us": us_dq,
         "rglru_scan_us": us_rs,
         "boundary_mixed_us": us_bm, "boundary_mixed_parity_ok": bm_ok,
+        "mega_fused_tick_us": us_fused,
+        "mega_unfused_chain_us": us_unfused,
+        "mega_speedup": us_unfused / us_fused,
+        "mega_parity_ok": mega_ok,
         "wire_compression": wire_bytes / raw_bytes,
     }
 
 
-def main():
+def main(argv=None):
+    import argparse
+    import json
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write the raw result dict as JSON "
+                         "(a {'kernels': ...} artifact for check_bench)")
+    args = ap.parse_args(argv)
+
     out = run()
     print(f"kernel_bottleneck_quant,{out['bottleneck_quant_us']:.0f},"
           f"wire_ratio={out['wire_compression']:.4f}")
@@ -94,8 +145,18 @@ def main():
     print(f"kernel_rglru_scan,{out['rglru_scan_us']:.0f},B4xS1024xD512")
     print(f"kernel_boundary_mixed,{out['boundary_mixed_us']:.0f},"
           f"B32x5modes,parity_ok={out['boundary_mixed_parity_ok']}")
+    print(f"kernel_mega_tick,{out['mega_fused_tick_us']:.0f},"
+          f"unfused={out['mega_unfused_chain_us']:.0f},"
+          f"speedup={out['mega_speedup']:.2f},"
+          f"parity_ok={out['mega_parity_ok']}")
     assert out["boundary_mixed_parity_ok"], \
         "interpret-mode boundary kernel diverged from the jnp reference"
+    assert out["mega_parity_ok"], \
+        "fused decode tail diverged from the unfused boundary+head+argmax chain"
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"kernels": out}, f, indent=2)
+        print(f"wrote {args.json}")
 
 
 if __name__ == "__main__":

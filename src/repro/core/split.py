@@ -128,12 +128,14 @@ def split_forward(params, tokens, cfg: ModelConfig, mode: int = 0, *,
 # ---------------------------------------------------------------------------
 
 def split_decode_step(params, token, states, cur_pos, cfg: ModelConfig,
-                      mode: int = 0):
+                      mode: int = 0, return_tokens: bool = False):
     """One-token decode with the boundary activation crossing the link.
 
     Encoder-side layer states stay on the UE; decoder-side states stay at the
     edge — only the (possibly bottlenecked) activation is transmitted.
-    Returns (logits, new_states, payload_bytes).
+    Returns (logits, new_states, payload_bytes); with ``return_tokens`` the
+    fused decode tail (``T.decode_tail_tokens``) replaces the logits with
+    argmax int32 tokens.
     """
     s = cfg.split.split_at
     x = T.embed_tokens(params, token, cfg, None)
@@ -152,15 +154,18 @@ def split_decode_step(params, token, states, cur_pos, cfg: ModelConfig,
                               dtype=T.model_dtype(cfg))
     x, dec_new = T.run_layers_decode(dec_l, x, dec_st, cur_pos, cfg,
                                      kinds=kinds[s:])
+    pb = bottleneck.mode_payload_bytes(cfg, B, 1, mode)
+    if return_tokens:
+        return (T.decode_tail_tokens(params, x, cfg),
+                _merge_states(enc_new, dec_new, cfg), pb)
     x = T.norm_apply_final(params, x, cfg)
     logits = T.lm_logits(params, x, cfg)
-    pb = bottleneck.mode_payload_bytes(cfg, B, 1, mode)
     return logits, _merge_states(enc_new, dec_new, cfg), pb
 
 
 def split_decode_step_mixed(params, stacked_bank, token, states, positions,
                             cfg: ModelConfig, mode_idx, block_table=None,
-                            mesh=None):
+                            mesh=None, return_tokens: bool = False):
     """One decode step for a *mixed-mode* continuous batch.
 
     Unlike :func:`split_decode_step`, every batch slot decodes at its own
@@ -183,7 +188,10 @@ def split_decode_step_mixed(params, stacked_bank, token, states, positions,
     the unsharded step; see ``ops.boundary_mixed_sharded``) and the
     decoder-side activation is re-constrained batch-over-``dp`` so GSPMD
     keeps the slot sharding through the decoder half. Returns (logits,
-    new_states).
+    new_states); with ``return_tokens`` the fused decode tail
+    (``T.decode_tail_tokens``) replaces the logits with argmax int32 tokens
+    and the whole tick is two kernels on TPU — boundary + tail — with the
+    f32 logits never touching HBM.
     """
     s = cfg.split.split_at
     x = T.embed_tokens(params, token, cfg, None)
@@ -197,6 +205,9 @@ def split_decode_step_mixed(params, stacked_bank, token, states, positions,
     x = sharding.constrain_batch(x, mesh)
     x, dec_new = T.run_layers_decode(dec_l, x, dec_st, positions, cfg,
                                      kinds=kinds[s:], block_table=block_table)
+    if return_tokens:
+        return T.decode_tail_tokens(params, x, cfg), _merge_states(
+            enc_new, dec_new, cfg)
     x = T.norm_apply_final(params, x, cfg)
     logits = T.lm_logits(params, x, cfg)
     return logits, _merge_states(enc_new, dec_new, cfg)

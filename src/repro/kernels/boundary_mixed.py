@@ -93,6 +93,106 @@ def _kernel(hid_ref, nch_ref, wid_ref, bit_ref, x_ref, down_ref, up_ref,
             out_ref[...] = y.astype(out_ref.dtype)
 
 
+def _tail_kernel(hid_ref, x_ref, heads_ref, scale_ref, bias_ref, out_ref,
+                 h_scr, best_scr, idx_scr, *, n_v: int, block_v: int,
+                 norm_kind: str):
+    v = pl.program_id(1)
+
+    @pl.when(v == 0)
+    def _prep():
+        # final-norm prologue in f32, rounded through the model dtype —
+        # exactly what norm_apply hands lm_logits — shared by every vocab
+        # chunk of this row block; running lane-max/lane-argmax reset
+        xf = x_ref[...].astype(jnp.float32)
+        if norm_kind == "rmsnorm":
+            y = xf * jax.lax.rsqrt(
+                jnp.mean(xf * xf, axis=-1, keepdims=True) + 1e-6)
+        else:                            # layernorm
+            mu = jnp.mean(xf, axis=-1, keepdims=True)
+            var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+            y = (xf - mu) * jax.lax.rsqrt(var + 1e-6)
+        y = y * scale_ref[0].astype(jnp.float32)
+        y = y + bias_ref[0].astype(jnp.float32)
+        h_scr[...] = y.astype(x_ref.dtype).astype(jnp.float32)
+        best_scr[...] = jnp.full_like(best_scr, -jnp.inf)
+        idx_scr[...] = jnp.zeros_like(idx_scr)
+
+    # one MXU tile of this block's head: the [block_r, block_v] logit chunk
+    # lives only in registers/VMEM — argmax folds it into the running
+    # per-lane max immediately, so the [B, V] f32 logits never touch HBM.
+    # Strict > keeps the EARLIEST chunk on ties, matching jnp.argmax.
+    logits = jnp.dot(h_scr[...], heads_ref[0].astype(jnp.float32),
+                     preferred_element_type=jnp.float32)
+    lane = v * block_v + jax.lax.broadcasted_iota(jnp.int32, logits.shape, 1)
+    better = logits > best_scr[...]
+    best_scr[...] = jnp.where(better, logits, best_scr[...])
+    idx_scr[...] = jnp.where(better, lane, idx_scr[...])
+
+    @pl.when(v == n_v - 1)
+    def _argmax():
+        # cross-lane reduce: global max, then the smallest index holding it
+        # (each lane's stored index is already its earliest occurrence)
+        best = best_scr[...]
+        m = jnp.max(best, axis=-1, keepdims=True)
+        tok = jnp.min(jnp.where(best == m, idx_scr[...],
+                                jnp.int32(2 ** 31 - 1)),
+                      axis=-1, keepdims=True)
+        out_ref[...] = jnp.broadcast_to(tok, out_ref.shape).astype(jnp.int32)
+
+
+def decode_tail_grouped(xp, heads, norm_scale, norm_bias, hid_g, *,
+                        block_r: int, block_v: int = 512,
+                        norm_kind: str = "rmsnorm",
+                        interpret: bool = False):
+    """Fused decode tail: final norm -> per-block LM-head gather -> streaming
+    argmax -> int32 token, one ``pallas_call`` (the serving tick's second and
+    last kernel — see ``ops.decode_tail_op``).
+
+    ``xp``: [P, d] decoder-output rows already permuted so each
+    ``block_r``-row block is head-uniform (``ops.head_layout``); ``heads``:
+    [H, d, V] stacked LM heads; ``norm_scale``/``norm_bias``: [d] final-norm
+    params (bias zeros for rmsnorm); ``hid_g``: [P/block_r] int32 per-block
+    head row. Returns [P, 128] int32 (the token broadcast across lanes;
+    callers read column 0).
+
+    P % block_r == 0, d % 128 == 0, V % block_v == 0 required (ops.py falls
+    back to the jnp reference otherwise).
+    """
+    P, d = xp.shape
+    H, d2, V = heads.shape
+    assert d == d2, (xp.shape, heads.shape)
+    assert P % block_r == 0 and d % 128 == 0 and V % block_v == 0, \
+        (P, d, V, block_r, block_v)
+    G = P // block_r
+    n_v = V // block_v
+    assert hid_g.shape == (G,), (hid_g.shape, G)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(G, n_v),
+        in_specs=[
+            pl.BlockSpec((block_r, d), lambda g, v, *s: (g, 0)),
+            pl.BlockSpec((1, d, block_v),
+                         lambda g, v, hid: (hid[g], 0, v)),
+            pl.BlockSpec((1, d), lambda g, v, *s: (0, 0)),
+            pl.BlockSpec((1, d), lambda g, v, *s: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_r, 128), lambda g, v, *s: (g, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((block_r, d), jnp.float32),        # normed activation
+            pltpu.VMEM((block_r, block_v), jnp.float32),  # running lane max
+            pltpu.VMEM((block_r, block_v), jnp.int32),    # running lane argmax
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_tail_kernel, n_v=n_v, block_v=block_v,
+                          norm_kind=norm_kind),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((P, 128), jnp.int32),
+        interpret=interpret,
+    )(hid_g, xp, heads, norm_scale.reshape(1, d), norm_bias.reshape(1, d))
+
+
 def boundary_mixed_grouped(xp, down_w, up_w, norm_scale, hid_g, nchunk_g,
                            width_g, bits_g, *, block_r: int,
                            block_w: int = 128, dtype=jnp.bfloat16,

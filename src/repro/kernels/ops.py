@@ -170,6 +170,67 @@ def group_layout(stacked, rmode, block_r: int, block_w: int):
                   "bits": bits_g.astype(jnp.int32)}
 
 
+def head_layout(head_idx, n_heads: int, block_r: int):
+    """Head-uniform row-block layout for the fused decode-tail kernel.
+
+    Same machinery as ``group_layout`` but keyed by LM-head row instead of
+    bottleneck mode: rows are stably sorted by head and padded so every
+    ``block_r``-row block gathers exactly one head. Returns (dest [rows]
+    int32, hid_g [P/block_r] int32, static padded row count P). Blocks past
+    the used span read head 0 and are never gathered back.
+    """
+    dest, starts, padded, P = _group_rows(head_idx, n_heads, block_r)
+    G = P // block_r
+    bstart = jnp.arange(G, dtype=jnp.int32) * block_r
+    used = bstart < jnp.sum(padded)
+    hid_g = jnp.clip(jnp.searchsorted(starts, bstart, side="right") - 1,
+                     0, n_heads - 1)
+    hid_g = jnp.where(used, hid_g, 0).astype(jnp.int32)
+    return dest, hid_g, P
+
+
+def decode_tail_op(x, norm_scale, norm_bias, heads, head_idx=None, *,
+                   norm_kind: str = "rmsnorm", tied: bool = False,
+                   interpret: bool | None = None):
+    """Fused decode tail: final norm -> LM-head gather -> argmax -> int32
+    token, in ONE kernel (dispatcher). Together with ``boundary_mixed_op``
+    this makes the device-resident serving tick exactly two kernels — the
+    f32 logits never leave VMEM.
+
+    Deliberately NOT jitted itself, for the same reason as the boundary op:
+    serving callers trace it inside a jitted step, and eager callers keep
+    the pinned op-by-op numerics of the legacy norm/lm_logits/argmax chain.
+
+    x: [B, S, d] decoder output; ``heads``: [H, d, V] stacked LM heads (or
+    the [1, V, d] embedding table when ``tied`` — transposed on the kernel
+    path only); ``head_idx``: [B] int32 per-row head, None = head 0.
+    Routes to the Pallas kernel on TPU (or ``interpret=True`` for tests);
+    CPU and non-128-aligned d/V take :func:`ref.decode_tail_ref`, which is
+    expression-identical to the legacy chain. Returns int32 tokens [B, S].
+    """
+    use_pallas = _ON_TPU if interpret is None else bool(interpret)
+    interp = (not _ON_TPU) if interpret is None else bool(interpret)
+    B, S, d = x.shape
+    V = heads.shape[1] if tied else heads.shape[2]
+    if not use_pallas or d % 128 or V % 128:
+        return ref.decode_tail_ref(x, norm_scale, norm_bias, heads, head_idx,
+                                   norm_kind=norm_kind, tied=tied)
+    hv = jnp.swapaxes(heads, 1, 2) if tied else heads
+    H = hv.shape[0]
+    hidx = jnp.zeros(B, jnp.int32) if head_idx is None \
+        else head_idx.astype(jnp.int32)
+    rhid = jnp.repeat(hidx, S)                          # per-token head
+    block_r = 16 if jnp.dtype(x.dtype).itemsize == 2 else 8
+    dest, hid_g, P = head_layout(rhid, H, block_r)
+    xp = jnp.zeros((P, d), x.dtype).at[dest].set(x.reshape(B * S, d))
+    bias = norm_bias if norm_bias is not None \
+        else jnp.zeros((d,), norm_scale.dtype)
+    tokp = _bm.decode_tail_grouped(
+        xp, hv, norm_scale, bias, hid_g, block_r=block_r,
+        block_v=_pick_block(V, 512), norm_kind=norm_kind, interpret=interp)
+    return tokp[dest, 0].reshape(B, S)
+
+
 def paged_kernel_eligible(*, n_q: int, n_kv: int, hd: int,
                           page_len: int) -> bool:
     """Whether the serving decode path should route paged attention through
@@ -224,13 +285,29 @@ def dequant_matmul_op(codes, scales, w, *, interpret: bool | None = None):
     return y.reshape(*lead, D)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def rglru_scan_op(a, b, *, interpret: bool | None = None):
-    """Blocked linear recurrence. a, b: [B, S, D] f32."""
-    interp = (not _ON_TPU) if interpret is None else interpret
+def rglru_scan_op(a, b, h0=None, *, interpret: bool | None = None):
+    """Blocked linear recurrence h_t = a_t * h_{t-1} + b_t (dispatcher).
+
+    Deliberately NOT jitted itself: the model layers call it inside jitted
+    prefill/decode steps (where it traces straight through), and the CPU
+    path must stay the plain ``lax.scan`` reference — bit-identical to the
+    ``chunked_scan`` cell path it replaces — not the interpreted kernel.
+
+    a, b: [B, S, D] f32; ``h0``: optional [B, D] initial carry. A non-zero
+    ``h0`` is absorbed into the first step (``b_1 += a_1 * h0``) so the
+    zero-carry Pallas kernel applies unchanged; the absorbed form is
+    bit-identical because ``a_1*h0 + b_1`` is the same f32 expression
+    either way. Routes to the Pallas kernel on TPU (or ``interpret=True``
+    for tests); CPU and non-block-multiple S/D take the jnp reference.
+    """
+    use_pallas = _ON_TPU if interpret is None else bool(interpret)
+    interp = (not _ON_TPU) if interpret is None else bool(interpret)
     B, S, D = a.shape
-    bs = _pick_block(S, 256, align=8)
-    bd = _pick_block(D, 512)
-    if S % bs or D % bd:
-        return ref.rglru_scan_ref(a, b)
-    return _rs.rglru_scan(a, b, block_s=bs, block_d=bd, interpret=interp)
+    # MXU-sane tiles only: sublane-multiple time blocks, lane-multiple
+    # feature blocks — anything else takes the reference
+    if not use_pallas or S % 8 or D % 128:
+        return ref.rglru_scan_ref(a, b, h0)
+    if h0 is not None:
+        b = b.at[:, 0, :].add(a[:, 0, :] * h0.astype(jnp.float32))
+    return _rs.rglru_scan(a, b, block_s=_pick_block(S, 256, align=8),
+                          block_d=_pick_block(D, 512), interpret=interp)

@@ -166,10 +166,11 @@ def dequant_matmul_ref(codes, scales, w, out_dtype=jnp.bfloat16):
     return (z @ w.astype(jnp.float32)).astype(out_dtype)
 
 
-def rglru_scan_ref(a, b):
-    """Gated linear recurrence h_t = a_t * h_{t-1} + b_t, h_0 = b_1 term.
+def rglru_scan_ref(a, b, h0=None):
+    """Gated linear recurrence h_t = a_t * h_{t-1} + b_t.
 
-    a, b: [B, S, D] f32 -> h: [B, S, D] f32.
+    a, b: [B, S, D] f32; ``h0``: optional [B, D] initial carry (zeros when
+    omitted — the post-reset decode case). Returns h: [B, S, D] f32.
     """
     def step(h, ab):
         at, bt = ab
@@ -177,6 +178,88 @@ def rglru_scan_ref(a, b):
         return h, h
 
     B, S, D = a.shape
-    h0 = jnp.zeros((B, D), jnp.float32)
-    _, hs = jax.lax.scan(step, h0, (a.swapaxes(0, 1), b.swapaxes(0, 1)))
+    if h0 is None:
+        h0 = jnp.zeros((B, D), jnp.float32)
+    _, hs = jax.lax.scan(step, h0.astype(jnp.float32),
+                         (a.swapaxes(0, 1), b.swapaxes(0, 1)))
     return hs.swapaxes(0, 1)
+
+
+def decode_tail_ref(x, norm_scale, norm_bias, heads, head_idx=None, *,
+                    norm_kind: str = "rmsnorm", tied: bool = False):
+    """Serving reference for the fused decode tail (final norm -> LM-head
+    gather -> argmax), expression-identical to the legacy
+    ``norm_apply(final_norm) -> lm_logits -> jnp.argmax`` chain so routing
+    the serving tick through it cannot move a single token on CPU.
+
+    x: [B, S, d]; ``heads``: [H, d, V] stacked LM heads, or the [1, V, d]
+    embedding table when ``tied``; ``head_idx``: [B] int32 per-row head (None
+    = head 0 everywhere). Returns int32 tokens [B, S].
+    """
+    xf = x.astype(jnp.float32)
+    if norm_kind == "rmsnorm":
+        y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True)
+                               + 1e-6)
+    else:                                # layernorm
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + 1e-6)
+    y = y * norm_scale.astype(jnp.float32)
+    if norm_bias is not None:
+        y = y + norm_bias.astype(jnp.float32)
+    xn = y.astype(x.dtype).astype(jnp.float32)
+    if tied:
+        logits = jnp.einsum("bsd,vd->bsv", xn, heads[0].astype(jnp.float32))
+    elif heads.shape[0] == 1:
+        logits = xn @ heads[0].astype(jnp.float32)
+    else:
+        hid = jnp.zeros(x.shape[0], jnp.int32) if head_idx is None \
+            else head_idx.astype(jnp.int32)
+        logits = jnp.einsum("bsd,bdv->bsv", xn,
+                            heads[hid].astype(jnp.float32))
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def decode_tail_grouped_ref(xp, heads, norm_scale, norm_bias, hid_g, *,
+                            block_r: int, block_v: int = 512,
+                            norm_kind: str = "rmsnorm"):
+    """Pure-jnp oracle for ``boundary_mixed.decode_tail_grouped`` mirroring
+    the kernel's blocked computation EXACTLY: same per-row-block head gather,
+    same f32 norm rounded through the model dtype, same vocab-chunked MXU
+    dots, same strict-``>`` running lane max with earliest-chunk tie-keeping
+    and final min-index reduce. Test-scale only (python loop over blocks).
+    Returns [P, 128] int32 (token broadcast across lanes, like the kernel).
+    """
+    P, d = xp.shape
+    n_v = heads.shape[-1] // block_v
+    outs = []
+    for g in range(P // block_r):
+        rows = xp[g * block_r:(g + 1) * block_r]
+        hid = int(hid_g[g])
+        xf = rows.astype(jnp.float32)
+        if norm_kind == "rmsnorm":
+            y = xf * jax.lax.rsqrt(
+                jnp.mean(xf * xf, axis=-1, keepdims=True) + 1e-6)
+        else:
+            mu = jnp.mean(xf, axis=-1, keepdims=True)
+            var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+            y = (xf - mu) * jax.lax.rsqrt(var + 1e-6)
+        y = y * norm_scale.astype(jnp.float32)
+        y = y + norm_bias.astype(jnp.float32)
+        h = y.astype(xp.dtype).astype(jnp.float32)
+        best = jnp.full((block_r, block_v), -jnp.inf, jnp.float32)
+        bidx = jnp.zeros((block_r, block_v), jnp.int32)
+        for v in range(n_v):
+            logits = jnp.dot(
+                h, heads[hid, :, v * block_v:(v + 1) * block_v].astype(
+                    jnp.float32),
+                preferred_element_type=jnp.float32)
+            lane = v * block_v + jnp.arange(block_v, dtype=jnp.int32)[None, :]
+            better = logits > best
+            best = jnp.where(better, logits, best)
+            bidx = jnp.where(better, lane, bidx)
+        m = jnp.max(best, axis=-1, keepdims=True)
+        tok = jnp.min(jnp.where(best == m, bidx, jnp.int32(2 ** 31 - 1)),
+                      axis=-1, keepdims=True)
+        outs.append(jnp.broadcast_to(tok, (block_r, 128)).astype(jnp.int32))
+    return jnp.concatenate(outs, axis=0)

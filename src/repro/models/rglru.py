@@ -53,15 +53,21 @@ def _causal_conv(p, u):
     return out
 
 
-def rglru_full(p, x, *, act: str = "gelu", use_assoc_scan: bool = False):
+def rglru_full(p, x, *, act: str = "gelu", use_assoc_scan: bool = False,
+               train: bool = False):
     """Full-sequence Griffin recurrent block. x: [B,S,d] -> [B,S,d].
 
-    Default path: chunked sequential scan (saved state = one carry per chunk,
-    mirroring the VMEM-carry structure of the Pallas ``rglru_scan`` kernel).
-    ``use_assoc_scan``: log-depth associative scan — lower latency on real
-    hardware but O(S log S) rematerialization in the backward pass (perf
-    knob, see EXPERIMENTS.md §Perf).
+    Default (eval) path: ``ops.rglru_scan_op`` — the Pallas blocked-VMEM
+    kernel on TPU, the plain ``lax.scan`` reference on CPU, which is
+    bit-identical to the ``chunked_scan`` cell path it replaced (same f32
+    multiply-add chain; pinned by tests). ``train=True`` keeps the
+    ``chunked_scan`` path: the Pallas kernel has no VJP, and training wants
+    the per-chunk remat structure anyway. ``use_assoc_scan``: log-depth
+    associative scan — lower latency on real hardware but O(S log S)
+    rematerialization in the backward pass (perf knob, see EXPERIMENTS.md).
     """
+    from repro.kernels import ops as kops
+
     gate = jax.nn.gelu(dense_apply(p["in_gate"], x))
     u = dense_apply(p["in_rec"], x).astype(jnp.float32)
     u = _causal_conv(p, u)
@@ -74,7 +80,7 @@ def rglru_full(p, x, *, act: str = "gelu", use_assoc_scan: bool = False):
             return al * ar, ar * bl + br
 
         _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
-    else:
+    elif train:
         def cell(carry, ab):
             at, bt = ab
             hh = at * carry + bt
@@ -84,11 +90,14 @@ def rglru_full(p, x, *, act: str = "gelu", use_assoc_scan: bool = False):
         _, h = chunked_scan(cell, jnp.zeros((B, dr), jnp.float32),
                             (a.swapaxes(0, 1), b.swapaxes(0, 1)))
         h = h.swapaxes(0, 1)
+    else:
+        h = kops.rglru_scan_op(a, b)
     y = (h.astype(x.dtype) * gate)
     return dense_apply(p["out"], y)
 
 
-def rglru_prefill(p, x, state, *, act: str = "gelu", lengths=None):
+def rglru_prefill(p, x, state, *, act: str = "gelu", lengths=None,
+                  use_scan_op: bool = True):
     """Full-sequence pass that also returns the decode state the sequence
     leaves behind — the batched replacement for looping ``rglru_step``.
 
@@ -96,8 +105,14 @@ def rglru_prefill(p, x, state, *, act: str = "gelu", lengths=None):
     ``rglru_state_init``. ``lengths``: optional [B] true lengths for
     right-padded batches — pad steps are identity updates (a=1, b=0), so the
     final state is exactly the state after each row's own last real token.
-    Returns (y [B, S, d], new_state).
+    The recurrence runs through ``ops.rglru_scan_op`` (Pallas on TPU, plain
+    scan on CPU) with the carried ``state["h"]`` as h0; ``use_scan_op=False``
+    keeps the legacy ``chunked_scan`` path — the parity oracle the op path
+    is pinned bit-identical against in tests. Returns (y [B, S, d],
+    new_state).
     """
+    from repro.kernels import ops as kops
+
     B, S, _ = x.shape
     gate = jax.nn.gelu(dense_apply(p["in_gate"], x))
     u_pre = dense_apply(p["in_rec"], x).astype(jnp.float32)     # [B, S, dr]
@@ -113,14 +128,18 @@ def rglru_prefill(p, x, state, *, act: str = "gelu", lengths=None):
     a = jnp.where(valid, a, 1.0)
     b = jnp.where(valid, b, 0.0)
 
-    def cell(carry, ab):
-        at, bt = ab
-        hh = at * carry + bt
-        return hh, hh
+    if use_scan_op:
+        h = kops.rglru_scan_op(a, b, h0=state["h"])
+        h_last = h[:, -1]          # pad steps are identity, so this IS the
+    else:                          # carry after each row's last real token
+        def cell(carry, ab):
+            at, bt = ab
+            hh = at * carry + bt
+            return hh, hh
 
-    h_last, h = chunked_scan(cell, state["h"],
-                             (a.swapaxes(0, 1), b.swapaxes(0, 1)))
-    h = h.swapaxes(0, 1)
+        h_last, h = chunked_scan(cell, state["h"],
+                                 (a.swapaxes(0, 1), b.swapaxes(0, 1)))
+        h = h.swapaxes(0, 1)
     y = dense_apply(p["out"], h.astype(x.dtype) * gate)
     # conv state after len steps = last CONV_W-1 rows of
     # [carried history, u_0 .. u_{len-1}] = hist[len : len + CONV_W - 1]

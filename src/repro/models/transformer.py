@@ -100,8 +100,12 @@ def check_cache_capacity(cfg: ModelConfig, pos: int, n: int, cache_len: int,
             f"would overwrite prompt context)")
 
 
-def block_apply_full(p, x, positions, cfg: ModelConfig, kind: str):
-    """Full-sequence block. Returns (x, aux_loss)."""
+def block_apply_full(p, x, positions, cfg: ModelConfig, kind: str,
+                     train: bool = False):
+    """Full-sequence block. Returns (x, aux_loss). ``train`` keeps the
+    recurrent families on their remat-friendly ``chunked_scan`` paths (the
+    Pallas scan op has no VJP); eval routes them through
+    ``ops.rglru_scan_op``."""
     aux = jnp.zeros((), jnp.float32)
     h = norm_apply(p["norm1"], x, cfg.norm)
     if kind == "attn":
@@ -110,9 +114,9 @@ def block_apply_full(p, x, positions, cfg: ModelConfig, kind: str):
                              rope_theta=cfg.rope_theta,
                              window=_attn_window(cfg))
     elif kind == "rglru":
-        mix = rglru_full(p["mix"], h, act=cfg.act)
+        mix = rglru_full(p["mix"], h, act=cfg.act, train=train)
     elif kind == "mlstm":
-        mix = mlstm_full(p["mix"], h, cfg.n_heads)
+        mix = mlstm_full(p["mix"], h, cfg.n_heads, train=train)
     elif kind == "slstm":
         mix = slstm_full(p["mix"], h, cfg.n_heads)
     else:
@@ -317,6 +321,31 @@ def lm_logits(params, x, cfg: ModelConfig):
     return x.astype(jnp.float32) @ params["lm_head"]["w"].astype(jnp.float32)
 
 
+def decode_tail_tokens(params, x, cfg: ModelConfig):
+    """Fused decode tail: final norm -> LM head -> argmax in one kernel
+    (``ops.decode_tail_op``), replacing the three separate HLO groups the
+    legacy ``norm_apply + lm_logits + jnp.argmax`` chain emits per tick.
+    On CPU the op's reference path is expression-identical to that chain,
+    so tokens cannot move; multi-codebook audio heads keep the legacy chain
+    (the per-codebook argmax is not a single head gather).
+
+    x: [B, S, d] decoder output (pre final norm). Returns int32 tokens
+    [B, S] ([B, K, S] audio)."""
+    from repro.kernels import ops as kops
+
+    if cfg.frontend == "audio" and cfg.n_codebooks > 1:
+        xn = norm_apply(params["final_norm"], x, cfg.norm)
+        return jnp.argmax(lm_logits(params, xn, cfg), axis=-1).astype(
+            jnp.int32)
+    fn = params["final_norm"]
+    if cfg.tie_embeddings:
+        heads, tied = params["embed"]["table"][None], True
+    else:
+        heads, tied = params["lm_head"]["w"][None], False
+    return kops.decode_tail_op(x, fn["scale"], fn.get("bias"), heads,
+                               norm_kind=cfg.norm, tied=tied)
+
+
 # ---------------------------------------------------------------------------
 # layer runners (shared by the full model and the split encoder/decoder)
 # ---------------------------------------------------------------------------
@@ -332,7 +361,7 @@ def run_layers(layers, x, positions, cfg: ModelConfig, *, train: bool,
         def body(carry, lp):
             h, aux = carry
             h = sharding.constrain(h, "resid")
-            h, a = block_apply_full(lp, h, positions, cfg, "attn")
+            h, a = block_apply_full(lp, h, positions, cfg, "attn", train)
             return (h, aux + a), None
         f = jax.checkpoint(body) if train else body
         (x, aux), _ = jax.lax.scan(f, (x, jnp.zeros((), jnp.float32)), layers)
@@ -342,7 +371,8 @@ def run_layers(layers, x, positions, cfg: ModelConfig, *, train: bool,
     aux = jnp.zeros((), jnp.float32)
     for lp, kind in zip(layers, kinds):
         x = sharding.constrain(x, "resid")
-        fn = functools.partial(block_apply_full, cfg=cfg, kind=kind)
+        fn = functools.partial(block_apply_full, cfg=cfg, kind=kind,
+                               train=train)
         if train:
             fn = jax.checkpoint(fn)
         x, a = fn(lp, x, positions)
@@ -441,12 +471,18 @@ def prefill(params, tokens, cfg: ModelConfig, states, lengths=None,
 
 
 def decode_step(params, token, states, cur_pos, cfg: ModelConfig,
-                embeddings: Optional[jnp.ndarray] = None, block_table=None):
+                embeddings: Optional[jnp.ndarray] = None, block_table=None,
+                return_tokens: bool = False):
     """One new token against the decode state. token: [B,1] (or [B,K,1]
-    audio). Returns (logits for the new position, new states)."""
+    audio). Returns (logits for the new position, new states); with
+    ``return_tokens`` the fused decode tail replaces the logits with argmax
+    int32 tokens (shaped like the token input) and the [B, V] logits never
+    materialize."""
     x = embed_tokens(params, token, cfg, None)
     x, new_states = run_layers_decode(params["layers"], x, states, cur_pos,
                                       cfg, block_table=block_table)
+    if return_tokens:
+        return decode_tail_tokens(params, x, cfg), new_states
     x = norm_apply(params["final_norm"], x, cfg.norm)
     return lm_logits(params, x, cfg), new_states
 

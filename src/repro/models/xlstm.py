@@ -79,23 +79,98 @@ def _mlstm_cell(state, qkvif):
     return {"C": C, "n": n, "m": m_new}, h
 
 
-def mlstm_full(p, x, n_heads: int):
-    """Full-sequence mLSTM block. x: [B,S,d] -> [B,S,d]."""
+def _mlstm_scan_op(q, k, v, i_pre, f_pre, state, valid):
+    """Decomposed mLSTM recurrence routing the normalizer ``n`` — the one
+    sub-recurrence of the exact ``h = a*h + b`` form — through
+    ``ops.rglru_scan_op`` (Pallas on TPU, plain scan on CPU).
+
+    Decomposition, bit-identical to scanning ``_mlstm_cell`` (pinned by
+    tests): (1) the max-stabilizer ``m`` is a tiny [B, H]-carry sequential
+    scan emitting each step's carried/candidate pair; (2) the normalized
+    gates ``i_g``/``f_g`` then fall out elementwise in parallel; (3) the
+    normalizer recurrence ``n = f_g*n + i_g*k`` runs through the scan op
+    with pad steps masked to identity (a=1, b=0) and ``state["n"]`` as h0;
+    (4) only the [B, H, hd, hd] matrix memory ``C`` remains in the
+    ``chunked_scan``, with the candidate ``n`` values it needs for the
+    output recomputed in parallel from the op's carries. The per-step h is
+    computed from candidate (pre-mask) state exactly like ``_mlstm_cell``,
+    pad positions included. Returns (final_state, h [B, S, H, hd] f32).
+    """
+    from repro.kernels import ops as kops
+
+    B, S, H = i_pre.shape
+    hd = k.shape[-1]
+    log_f = -jax.nn.softplus(-f_pre)                      # [B, S, H]
+
+    def mstep(m, t):
+        lf_t, ip_t, ok_t = t
+        m_cand = jnp.maximum(lf_t + m, ip_t)
+        m_cand = jnp.where(jnp.isfinite(m_cand), m_cand, ip_t)
+        return jnp.where(ok_t[:, None], m_cand, m), (m, m_cand)
+
+    m_last, (m_prev, m_cand) = jax.lax.scan(
+        mstep, state["m"],
+        (log_f.swapaxes(0, 1), i_pre.swapaxes(0, 1), valid.swapaxes(0, 1)))
+    m_prev = m_prev.swapaxes(0, 1)                        # carried m at t
+    m_cand = m_cand.swapaxes(0, 1)                        # candidate m_new
+    i_g = jnp.exp(i_pre - m_cand)
+    f_g = jnp.exp(log_f + m_prev - m_cand)
+    f_g = jnp.where(jnp.isfinite(m_prev), f_g, 0.0)
+
+    ok = valid[:, :, None, None]
+    a_n = jnp.broadcast_to(jnp.where(ok, f_g[..., None], 1.0),
+                           (B, S, H, hd))
+    b_n = jnp.where(ok, i_g[..., None] * k, 0.0)
+    n_seq = kops.rglru_scan_op(
+        a_n.reshape(B, S, H * hd), b_n.reshape(B, S, H * hd),
+        h0=state["n"].reshape(B, H * hd)).reshape(B, S, H, hd)
+    n_prev = jnp.concatenate([state["n"][:, None], n_seq[:, :-1]], axis=1)
+    n_cand = f_g[..., None] * n_prev + i_g[..., None] * k
+
+    def cstep(C, t):
+        kt, vt, qt, igt, fgt, nct, okt = t
+        C_new = fgt[..., None, None] * C \
+            + igt[..., None, None] * (vt[..., :, None] * kt[..., None, :])
+        h_num = jnp.einsum("bhij,bhj->bhi", C_new, qt)
+        h_den = jnp.maximum(jnp.abs(jnp.einsum("bhj,bhj->bh", nct, qt)), 1.0)
+        h = h_num / h_den[..., None]
+        return jnp.where(okt.reshape(-1, 1, 1, 1), C_new, C), h
+
+    C_last, hs = chunked_scan(
+        cstep, state["C"],
+        (k.swapaxes(0, 1), v.swapaxes(0, 1), q.swapaxes(0, 1),
+         i_g.swapaxes(0, 1), f_g.swapaxes(0, 1), n_cand.swapaxes(0, 1),
+         valid.swapaxes(0, 1)), chunk=64)
+    final = {"C": C_last, "n": n_seq[:, -1], "m": m_last}
+    return final, hs.swapaxes(0, 1)
+
+
+def mlstm_full(p, x, n_heads: int, *, train: bool = False):
+    """Full-sequence mLSTM block. x: [B,S,d] -> [B,S,d].
+
+    Default (eval) path: the decomposed recurrence of ``_mlstm_scan_op``.
+    ``train=True`` keeps the fused-cell ``chunked_scan`` (the scan op's
+    Pallas kernel has no VJP; the cell path remats per chunk)."""
     xl, q, k, v, i_pre, f_pre = _mlstm_qkvif(p, x, n_heads)
     B, S = x.shape[:2]
     state = mlstm_state_init(B, x.shape[-1], n_heads)
 
-    def step(st, t):
-        qt, kt, vt, it, ft = t
-        return _mlstm_cell(st, (qt, kt, vt, it, ft))
+    if train:
+        def step(st, t):
+            qt, kt, vt, it, ft = t
+            return _mlstm_cell(st, (qt, kt, vt, it, ft))
 
-    xs = (q.swapaxes(0, 1), k.swapaxes(0, 1), v.swapaxes(0, 1),
-          i_pre.swapaxes(0, 1), f_pre.swapaxes(0, 1))
-    # small chunks: the [B,H,hd,hd] matrix memory is the dominant residual,
-    # saved once per chunk (outer) and once per step within the chunk being
-    # differentiated — 64 balances the two (see DESIGN.md)
-    _, hs = chunked_scan(step, state, xs, chunk=64)   # hs: [S,B,H,hd]
-    h = hs.swapaxes(0, 1).reshape(B, S, -1).astype(x.dtype)
+        xs = (q.swapaxes(0, 1), k.swapaxes(0, 1), v.swapaxes(0, 1),
+              i_pre.swapaxes(0, 1), f_pre.swapaxes(0, 1))
+        # small chunks: the [B,H,hd,hd] matrix memory is the dominant
+        # residual, saved once per chunk (outer) and once per step within
+        # the chunk being differentiated — 64 balances the two (DESIGN.md)
+        _, hs = chunked_scan(step, state, xs, chunk=64)   # hs: [S,B,H,hd]
+        h = hs.swapaxes(0, 1).reshape(B, S, -1).astype(x.dtype)
+    else:
+        _, hs = _mlstm_scan_op(q, k, v, i_pre, f_pre, state,
+                               jnp.ones((B, S), bool))
+        h = hs.reshape(B, S, -1).astype(x.dtype)
     gate = jax.nn.silu(dense_apply(p["up_r"], x))
     return dense_apply(p["down"], h * gate)
 
@@ -107,25 +182,35 @@ def _keep_state(valid_b, new, old):
             valid_b.reshape((-1,) + (1,) * (n.ndim - 1)), n, o), new, old)
 
 
-def mlstm_prefill(p, x, state, n_heads: int, lengths=None):
+def mlstm_prefill(p, x, state, n_heads: int, lengths=None, *,
+                  use_scan_op: bool = True):
     """Full-sequence mLSTM that also returns the final recurrent state —
     the batched replacement for looping ``mlstm_step``. ``lengths``:
     optional [B] true lengths for right-padded batches (pad steps keep the
-    carried state). Returns (y [B, S, d], final_state)."""
+    carried state). The normalizer recurrence runs through
+    ``ops.rglru_scan_op`` (see ``_mlstm_scan_op``); ``use_scan_op=False``
+    keeps the legacy fused-cell scan — the parity oracle the op path is
+    pinned bit-identical against in tests. Returns (y [B, S, d],
+    final_state)."""
     xl, q, k, v, i_pre, f_pre = _mlstm_qkvif(p, x, n_heads)
     B, S = x.shape[:2]
     valid = (jnp.ones((B, S), bool) if lengths is None
              else jnp.arange(S)[None, :] < jnp.asarray(lengths)[:, None])
 
-    def step(st, t):
-        qt, kt, vt, it, ft, ok = t
-        new, h = _mlstm_cell(st, (qt, kt, vt, it, ft))
-        return _keep_state(ok, new, st), h
+    if use_scan_op:
+        final, hs = _mlstm_scan_op(q, k, v, i_pre, f_pre, state, valid)
+        h = hs.reshape(B, S, -1).astype(x.dtype)
+    else:
+        def step(st, t):
+            qt, kt, vt, it, ft, ok = t
+            new, h = _mlstm_cell(st, (qt, kt, vt, it, ft))
+            return _keep_state(ok, new, st), h
 
-    xs = (q.swapaxes(0, 1), k.swapaxes(0, 1), v.swapaxes(0, 1),
-          i_pre.swapaxes(0, 1), f_pre.swapaxes(0, 1), valid.swapaxes(0, 1))
-    final, hs = chunked_scan(step, state, xs, chunk=64)
-    h = hs.swapaxes(0, 1).reshape(B, S, -1).astype(x.dtype)
+        xs = (q.swapaxes(0, 1), k.swapaxes(0, 1), v.swapaxes(0, 1),
+              i_pre.swapaxes(0, 1), f_pre.swapaxes(0, 1),
+              valid.swapaxes(0, 1))
+        final, hs = chunked_scan(step, state, xs, chunk=64)
+        h = hs.swapaxes(0, 1).reshape(B, S, -1).astype(x.dtype)
     gate = jax.nn.silu(dense_apply(p["up_r"], x))
     return dense_apply(p["down"], h * gate), final
 
@@ -142,7 +227,9 @@ def mlstm_step(p, x, state, n_heads: int):
 
 
 # ---------------------------------------------------------------------------
-# sLSTM
+# sLSTM — stays on the fused-cell chunked_scan: h_{t-1} feeds every gate
+# preactivation through the recurrent r_* matrices, so the recurrence is NOT
+# of the h = a*h + b form the rglru_scan kernel accelerates.
 # ---------------------------------------------------------------------------
 
 def slstm_init(key, d: int, n_heads: int, *, dtype=jnp.bfloat16):

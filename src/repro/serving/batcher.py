@@ -195,8 +195,45 @@ class _EngineSteps:
         self.mixed_prefill = mixed_prefill
 
 
-def _paged_steps(cfg: ModelConfig, mixed: bool,
-                 mesh=None) -> _EngineSteps:
+def _window_scan_body(cfg: ModelConfig, mesh, *, mixed: bool,
+                      fused_tail: bool):
+    """The ONE place the device-resident decode window's scan body is
+    defined — shared by the dense and paged step builders (``bt=None``
+    selects dense) and by the plain and mixed variants.
+
+    A [K, B] mode matrix drives K whole ticks in one ``lax.scan``: token
+    feedback, position increments and per-tick mode gathers all stay on
+    device. With ``fused_tail`` (the default) each tick asks the model step
+    for tokens directly (``return_tokens=True`` ->
+    ``ops.decode_tail_op``), so a tick lowers to the boundary kernel plus
+    ONE fused norm/head/argmax tail kernel with the token fed straight back
+    into the next tick's embed — no separate head/argmax/feedback HLOs and
+    no [B, V] f32 logits in HBM. ``fused_tail=False`` keeps the legacy
+    logits+argmax body: the equivalence oracle ``tests/test_device_loop.py``
+    pins token streams against."""
+    def run(params, stacked, tok, states, positions, modes_k, bt):
+        def body(carry, modes):
+            tok, states, positions = carry
+            if mixed:
+                out, new_states = SP.split_decode_step_mixed(
+                    params, stacked, tok, states, positions, cfg, modes,
+                    block_table=bt, mesh=mesh, return_tokens=fused_tail)
+            else:
+                out, new_states = T.decode_step(
+                    params, tok, states, positions, cfg, block_table=bt,
+                    return_tokens=fused_tail)
+            nxt = out if fused_tail else jnp.argmax(out, axis=-1)
+            nxt = nxt.astype(jnp.int32).reshape(tok.shape)
+            return (nxt, new_states, positions + 1), nxt
+
+        carry, toks = jax.lax.scan(body, (tok, states, positions), modes_k)
+        return (*carry, toks)
+
+    return run
+
+
+def _paged_steps(cfg: ModelConfig, mixed: bool, mesh=None,
+                 fused_tail: bool = True) -> _EngineSteps:
     """Paged variants of the engine closures: every decode step threads the
     ``[B, nb]`` block table through to the paged attention path, and
     prefill writes straight into the (donated) page arena through the
@@ -204,6 +241,8 @@ def _paged_steps(cfg: ModelConfig, mixed: bool,
     The closures are shape-polymorphic in the table width (pow2-bucketed by
     the pool), so one set serves every arena size. ``mesh`` builds the
     sharded variants (see :func:`_compiled_steps`)."""
+    run_mono = _window_scan_body(cfg, mesh, mixed=False,
+                                 fused_tail=fused_tail)
 
     @jax.jit
     def mono_step(params, tok, states, pos, bt):
@@ -211,17 +250,7 @@ def _paged_steps(cfg: ModelConfig, mixed: bool,
 
     @functools.partial(jax.jit, donate_argnums=(2, 3))
     def mono_step_dev(params, tok, states, positions, modes_k, bt):
-        def body(carry, _modes):
-            tok, states, positions = carry
-            logits, new_states = T.decode_step(params, tok, states,
-                                               positions, cfg,
-                                               block_table=bt)
-            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-            nxt = nxt.reshape(tok.shape)
-            return (nxt, new_states, positions + 1), nxt
-
-        carry, toks = jax.lax.scan(body, (tok, states, positions), modes_k)
-        return (*carry, toks)
+        return run_mono(params, None, tok, states, positions, modes_k, bt)
 
     @functools.partial(jax.jit, donate_argnums=(3,))
     def mono_prefill(params, toks, lengths, arena, bt):
@@ -232,6 +261,9 @@ def _paged_steps(cfg: ModelConfig, mixed: bool,
     if not mixed:
         return _EngineSteps(mono_step, mono_step_dev, mono_prefill)
 
+    run_mixed = _window_scan_body(cfg, mesh, mixed=True,
+                                  fused_tail=fused_tail)
+
     @jax.jit
     def mixed_step(params, stacked, tok, states, positions, modes, bt):
         return SP.split_decode_step_mixed(params, stacked, tok, states,
@@ -240,17 +272,8 @@ def _paged_steps(cfg: ModelConfig, mixed: bool,
 
     @functools.partial(jax.jit, donate_argnums=(3, 4))
     def mixed_step_dev(params, stacked, tok, states, positions, modes_k, bt):
-        def body(carry, modes):
-            tok, states, positions = carry
-            logits, new_states = SP.split_decode_step_mixed(
-                params, stacked, tok, states, positions, cfg, modes,
-                block_table=bt, mesh=mesh)
-            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-            nxt = nxt.reshape(tok.shape)
-            return (nxt, new_states, positions + 1), nxt
-
-        carry, toks = jax.lax.scan(body, (tok, states, positions), modes_k)
-        return (*carry, toks)
+        return run_mixed(params, stacked, tok, states, positions, modes_k,
+                         bt)
 
     @functools.partial(jax.jit, donate_argnums=(4,))
     def mixed_prefill(params, stacked, toks, lengths, arena, modes, bt):
@@ -265,7 +288,8 @@ def _paged_steps(cfg: ModelConfig, mixed: bool,
 
 @functools.lru_cache(maxsize=None)
 def _compiled_steps(cfg: ModelConfig, cache_len: int, mixed: bool,
-                    paged: bool = False, mesh=None) -> _EngineSteps:
+                    paged: bool = False, mesh=None,
+                    fused_tail: bool = True) -> _EngineSteps:
     """Build (once per ``(cfg, cache_len)``) the jitted decode/prefill
     closures every ``ContinuousBatchingEngine`` runs on. Cached at module
     level so N engines of the same configuration — a cluster's replicas,
@@ -283,9 +307,16 @@ def _compiled_steps(cfg: ModelConfig, cache_len: int, mixed: bool,
     annotated inputs the engine places (GSPMD propagates input shardings
     through the whole step, donation included). Engines on the SAME mesh —
     e.g. benchmark A/B pairs — still share one compile cache; cluster
-    replicas on disjoint device subsets get one entry each."""
+    replicas on disjoint device subsets get one entry each.
+
+    ``fused_tail`` (part of the cache key) selects the fused decode-tail
+    window body — see :func:`_window_scan_body`; ``False`` builds the
+    legacy logits+argmax loop the device-loop equivalence tests run."""
     if paged:
-        return _paged_steps(cfg, mixed, mesh)
+        return _paged_steps(cfg, mixed, mesh, fused_tail)
+
+    run_mono = _window_scan_body(cfg, mesh, mixed=False,
+                                 fused_tail=fused_tail)
 
     @jax.jit
     def mono_step(params, tok, states, pos):
@@ -302,17 +333,8 @@ def _compiled_steps(cfg: ModelConfig, cache_len: int, mixed: bool,
     # along (their positions drift, but admission rewrites them).
     @functools.partial(jax.jit, donate_argnums=(2, 3))
     def mono_step_dev(params, tok, states, positions, modes_k):
-        def body(carry, _modes):
-            tok, states, positions = carry
-            logits, new_states = T.decode_step(params, tok, states,
-                                               positions, cfg)
-            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-            nxt = nxt.reshape(tok.shape)
-            return (nxt, new_states, positions + 1), nxt
-
-        carry, toks = jax.lax.scan(body, (tok, states, positions),
-                                   modes_k)
-        return (*carry, toks)
+        return run_mono(params, None, tok, states, positions, modes_k,
+                        None)
 
     @jax.jit
     def mono_prefill(params, toks, lengths):
@@ -334,20 +356,13 @@ def _compiled_steps(cfg: ModelConfig, cache_len: int, mixed: bool,
                                           states, positions, cfg, modes,
                                           mesh=mesh)
 
+    run_mixed = _window_scan_body(cfg, mesh, mixed=True,
+                                  fused_tail=fused_tail)
+
     @functools.partial(jax.jit, donate_argnums=(3, 4))
     def mixed_step_dev(params, stacked, tok, states, positions, modes_k):
-        def body(carry, modes):
-            tok, states, positions = carry
-            logits, new_states = SP.split_decode_step_mixed(
-                params, stacked, tok, states, positions, cfg, modes,
-                mesh=mesh)
-            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-            nxt = nxt.reshape(tok.shape)
-            return (nxt, new_states, positions + 1), nxt
-
-        carry, toks = jax.lax.scan(body, (tok, states, positions),
-                                   modes_k)
-        return (*carry, toks)
+        return run_mixed(params, stacked, tok, states, positions, modes_k,
+                         None)
 
     @jax.jit
     def mixed_prefill(params, stacked, toks, lengths, modes):
@@ -680,7 +695,8 @@ class ContinuousBatchingEngine:
                  paged: Optional[bool] = None,
                  page_len: int = 8,
                  n_pages: Optional[int] = None,
-                 mesh=None):
+                 mesh=None,
+                 fused_tail: bool = True):
         if controller is not None:
             if freeze_modes:
                 raise ValueError("controller and freeze_modes are mutually "
@@ -749,9 +765,13 @@ class ContinuousBatchingEngine:
         self._tok_shape = ((n_slots, cfg.n_codebooks, 1)
                            if cfg.frontend == "audio" and cfg.n_codebooks > 1
                            else (n_slots, 1))
+        # fused_tail: window ticks end in the fused norm/head/argmax tail
+        # kernel (see _window_scan_body); False keeps the legacy
+        # logits+argmax window — the token-identity oracle in tests
+        self.fused_tail = bool(fused_tail)
         steps = _compiled_steps(cfg, cache_len,
                                 self.stacked_bank is not None, self.paged,
-                                mesh)
+                                mesh, self.fused_tail)
         self.host_loop = host_loop
         self.max_window = max(int(max_window), 1)
         if not host_loop:
@@ -788,6 +808,7 @@ class ContinuousBatchingEngine:
         #: lifetime can never interleave with another's. ``close()`` (or
         #: the context manager) shuts it down.
         self._exec: Optional[_cf.ThreadPoolExecutor] = None
+        self._mode_pb: Dict[int, int] = {}   # per-mode wire bytes memo
         #: not-yet-"arrived" requests as a min-heap on (arrival_tick, seq):
         #: a fleet-scale load script submits thousands of future arrivals
         #: up front, so the per-tick due-scan and the idle-skip peek must
@@ -1019,7 +1040,18 @@ class ContinuousBatchingEngine:
             self.orch.release(sess.request.rid)
 
     # -- decode ---------------------------------------------------------------
-    def _choose_modes(self, tick: Optional[int] = None) -> np.ndarray:
+    def _payload_bytes(self, mode: int) -> int:
+        """Per-token wire bytes for ``mode`` — a pure function of the fixed
+        config, memoized because mode accounting runs K x B times per decode
+        window on the host, squarely on the dispatch critical path."""
+        pb = self._mode_pb.get(mode)
+        if pb is None:
+            pb = self._mode_pb[mode] = bottleneck.mode_payload_bytes(
+                self.cfg, 1, 1, mode)
+        return pb
+
+    def _choose_modes(self, tick: Optional[int] = None,
+                      items=None) -> np.ndarray:
         """Per-slot mode selection for ONE decode tick (``tick`` defaults
         to the current one; the device loop calls this for each tick of a
         decode window before dispatching the whole window — mode selection
@@ -1044,7 +1076,8 @@ class ContinuousBatchingEngine:
         """
         tick = self.tick if tick is None else tick
         modes = np.zeros(self.pool.n_slots, np.int32)
-        items = sorted(self.active.items())        # deterministic slot order
+        if items is None:                          # deterministic slot order
+            items = sorted(self.active.items())    # (window loops hoist this)
         caps = [sess.request.channel.step()
                 if self.orch is not None and sess.request.channel is not None
                 else None
@@ -1069,7 +1102,7 @@ class ContinuousBatchingEngine:
                     # else: no bottleneck bank in params — the decode path
                     # can only transmit the raw boundary, so account mode 0
                     # rather than charging for compression that never runs
-                pb = bottleneck.mode_payload_bytes(self.cfg, 1, 1, mode)
+                pb = self._payload_bytes(mode)
                 link = self.orch.register(rid)
                 tx = tx_seconds(pb, cap if cap is not None
                                 else link.capacity_ema)
@@ -1081,8 +1114,7 @@ class ContinuousBatchingEngine:
                         tx > self.orch.requirement_for(rid).latency_budget_s:
                     sess.deadline_misses += 1
             else:
-                pb = bottleneck.mode_payload_bytes(self.cfg, 1, 1, 0)
-                sess.account(0, pb, 0.0)
+                sess.account(0, self._payload_bytes(0), 0.0)
             if sess.mode_trace and sess.mode_trace[-1][1] != mode:
                 sess.mode_trace.append((tick, mode))
             modes[slot] = mode
@@ -1218,13 +1250,18 @@ class ContinuousBatchingEngine:
                 self.pool.alloc_pages(slot,
                                       int(self.pool.positions[slot]) + k)
             bt = self.pool.block_table()
-        modes_k = np.stack([self._choose_modes(self.tick + i)
+        # the live-session set is frozen for the whole window (retirement
+        # is budget-driven and happens after dispatch), so sort once and
+        # reuse the ordering for every tick's mode selection AND as the
+        # materialization snapshot
+        snapshot = sorted(self.active.items())
+        modes_k = np.stack([self._choose_modes(self.tick + i,
+                                               items=snapshot)
                             for i in range(k)])
         prev = self._inflight
         fut = self._dispatch_device_step(modes_k, bt)
         # snapshot BEFORE retirement: these sessions each emit one token
         # per window tick, whose values land at the next materialization
-        snapshot = sorted(self.active.items())
         self._inflight = (snapshot, fut, k)
 
         self.decode_ticks += k

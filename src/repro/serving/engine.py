@@ -92,23 +92,27 @@ class ServingEngine:
         return self._steps[mode]
 
     def _tok_step(self, mode: Optional[int]):
-        """Jitted decode step with the argmax fused in, so only int32
-        tokens ever cross the host boundary (and the per-mode split step is
-        actually compiled instead of retraced eagerly every token)."""
+        """Jitted decode step ending in the fused decode tail
+        (``return_tokens=True`` -> ``ops.decode_tail_op``): norm, LM head
+        and argmax run as one kernel on TPU (expression-identical reference
+        chain on CPU), so only int32 tokens ever cross the host boundary
+        (and the per-mode split step is actually compiled instead of
+        retraced eagerly every token)."""
         if mode not in self._tok_steps:
             cfg = self.cfg
 
             if mode is None:
                 @jax.jit
                 def step(params, tok, states, pos):
-                    logits, st = T.decode_step(params, tok, states, pos, cfg)
-                    return jnp.argmax(logits, -1).astype(jnp.int32), st
+                    return T.decode_step(params, tok, states, pos, cfg,
+                                         return_tokens=True)
             else:
                 @jax.jit
                 def step(params, tok, states, pos):
-                    logits, st, _ = SP.split_decode_step(
-                        params, tok, states, pos, cfg, mode=mode)
-                    return jnp.argmax(logits, -1).astype(jnp.int32), st
+                    nxt, st, _ = SP.split_decode_step(
+                        params, tok, states, pos, cfg, mode=mode,
+                        return_tokens=True)
+                    return nxt, st
             self._tok_steps[mode] = step
         return self._tok_steps[mode]
 

@@ -45,10 +45,11 @@ def _orch(cfg):
         AppRequirement(latency_budget_s=0.006), ema=0.5, hysteresis=1.0)
 
 
-def _run(params, cfg, host_loop: bool):
+def _run(params, cfg, host_loop: bool, *, fused_tail: bool = True):
     eng = ContinuousBatchingEngine(params, cfg, n_slots=3, cache_len=32,
                                    orchestrator=_orch(cfg),
-                                   host_loop=host_loop)
+                                   host_loop=host_loop,
+                                   fused_tail=fused_tail)
     done = eng.run(_requests(cfg, 10))
     st = eng.stats()
     assert eng.pool.n_free == eng.pool.n_slots
@@ -80,6 +81,36 @@ def test_device_loop_token_identical_to_host_loop(arch):
               "prefill_calls", "mode_counts", "generated_tokens",
               "mode_switches", "deadline_misses"]:
         assert host_st[k] == dev_st[k], k
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_megakernel_loop_token_identical_to_legacy_window_loop(arch):
+    """The fused decode tail (``fused_tail=True``: norm + LM-head gather +
+    argmax + token feedback inside the scan body, one tail kernel per tick
+    on TPU) must decode the exact streams the pre-megakernel window loop
+    (``fused_tail=False``: full-vocab logits returned, argmax in the scan
+    body) decodes — same tokens, modes, wire accounting, tick lifecycle —
+    across attention, rglru and xLSTM decode-state families."""
+    cfg = get_reduced(arch)
+    params = SP.init_split_params(jax.random.PRNGKey(0), cfg)
+    legacy_done, legacy_st = _run(params, cfg, host_loop=False,
+                                  fused_tail=False)
+    fused_done, fused_st = _run(params, cfg, host_loop=False,
+                                fused_tail=True)
+
+    legacy = {s.request.rid: s for s in legacy_done}
+    fused = {s.request.rid: s for s in fused_done}
+    assert legacy.keys() == fused.keys() and len(legacy) == 10
+    for rid in legacy:
+        assert legacy[rid].tokens == fused[rid].tokens, rid
+        assert legacy[rid].mode_counts == fused[rid].mode_counts, rid
+        assert legacy[rid].wire_bytes == fused[rid].wire_bytes, rid
+        assert legacy[rid].admitted_tick == fused[rid].admitted_tick, rid
+        assert legacy[rid].finished_tick == fused[rid].finished_tick, rid
+    for k in ["decode_ticks", "mixed_mode_ticks", "wire_bytes",
+              "prefill_calls", "mode_counts", "generated_tokens",
+              "mode_switches", "deadline_misses"]:
+        assert legacy_st[k] == fused_st[k], k
 
 
 def test_device_loop_budget_one_and_tick_exhaustion():

@@ -120,3 +120,87 @@ def test_mlstm_stabilizer_no_overflow():
     x = 100.0 * jax.random.normal(key, (B, S, d), jnp.float32)
     y = X.mlstm_full(p, x, H)
     assert bool(jnp.all(jnp.isfinite(y)))
+
+
+# ---------------------------------------------------------------------------
+# scan-op wiring parity: the ops.rglru_scan_op paths (eval default) must be
+# bit-identical to the legacy chunked_scan cell paths they replaced
+# ---------------------------------------------------------------------------
+
+def test_rglru_full_scan_op_matches_legacy():
+    """rglru_full: train=True (legacy chunked_scan, differentiable) and the
+    default eval path (ops.rglru_scan_op) must agree BIT FOR BIT."""
+    p = R.rglru_init(jax.random.PRNGKey(2), 64, 96)
+    x = jax.random.normal(jax.random.PRNGKey(3), (3, 17, 64), jnp.bfloat16)
+    y_legacy = R.rglru_full(p, x, train=True)
+    y_op = R.rglru_full(p, x, train=False)
+    np.testing.assert_array_equal(np.asarray(y_legacy, np.float32),
+                                  np.asarray(y_op, np.float32))
+
+
+def test_rglru_prefill_scan_op_matches_legacy_lengths():
+    """rglru_prefill through the scan op vs the legacy chunked_scan path:
+    outputs AND carried state (h + conv history) bit-identical, including
+    non-block-multiple lengths and a non-zero carried h0."""
+    d, dr, B, S = 64, 96, 4, 13
+    p = R.rglru_init(jax.random.PRNGKey(4), d, dr)
+    x = jax.random.normal(jax.random.PRNGKey(5), (B, S, d), jnp.bfloat16)
+    st = {"h": jax.random.normal(jax.random.PRNGKey(6), (B, dr), jnp.float32),
+          "conv": jax.random.normal(jax.random.PRNGKey(7), (B, 3, dr),
+                                    jnp.float32)}
+    for lengths in (None, jnp.asarray([13, 7, 3, 1], jnp.int32)):
+        y0, s0 = R.rglru_prefill(p, x, st, lengths=lengths,
+                                 use_scan_op=False)
+        y1, s1 = R.rglru_prefill(p, x, st, lengths=lengths,
+                                 use_scan_op=True)
+        np.testing.assert_array_equal(np.asarray(y0, np.float32),
+                                      np.asarray(y1, np.float32))
+        for k in s0:
+            np.testing.assert_array_equal(np.asarray(s0[k]),
+                                          np.asarray(s1[k]))
+
+
+def test_mlstm_full_scan_op_matches_legacy():
+    """mlstm_full: the decomposed recurrence (m-scan -> parallel gates ->
+    normalizer via ops.rglru_scan_op -> C-only chunked_scan) must be
+    bit-identical to scanning the fused cell."""
+    H, d = 4, 64
+    p = X.mlstm_init(jax.random.PRNGKey(8), d, H)
+    x = jax.random.normal(jax.random.PRNGKey(9), (3, 19, d), jnp.bfloat16)
+    y_legacy = X.mlstm_full(p, x, H, train=True)
+    y_op = X.mlstm_full(p, x, H, train=False)
+    np.testing.assert_array_equal(np.asarray(y_legacy, np.float32),
+                                  np.asarray(y_op, np.float32))
+
+
+def test_mlstm_prefill_scan_op_matches_legacy_lengths():
+    """mlstm_prefill decomposed vs fused-cell path: outputs and the full
+    final state (C, n, m) bit-identical for ragged lengths, and chained
+    from a REAL mid-stream state (finite m, non-zero n/C)."""
+    H, d, B, S = 4, 64, 3, 11
+    p = X.mlstm_init(jax.random.PRNGKey(10), d, H)
+    x = jax.random.normal(jax.random.PRNGKey(11), (B, S, d), jnp.bfloat16)
+    st = X.mlstm_state_init(B, d, H)
+    for lengths in (None, jnp.asarray([11, 5, 2], jnp.int32)):
+        y0, s0 = X.mlstm_prefill(p, x, st, H, lengths=lengths,
+                                 use_scan_op=False)
+        y1, s1 = X.mlstm_prefill(p, x, st, H, lengths=lengths,
+                                 use_scan_op=True)
+        np.testing.assert_array_equal(np.asarray(y0, np.float32),
+                                      np.asarray(y1, np.float32))
+        for k in s0:
+            np.testing.assert_array_equal(np.asarray(s0[k]),
+                                          np.asarray(s1[k]))
+    # continue from the state the first prefill left behind
+    _, mid0 = X.mlstm_prefill(p, x, st, H, use_scan_op=False)
+    _, mid1 = X.mlstm_prefill(p, x, st, H, use_scan_op=True)
+    y0, e0 = X.mlstm_prefill(p, x, mid0, H,
+                             lengths=jnp.asarray([4, 11, 8], jnp.int32),
+                             use_scan_op=False)
+    y1, e1 = X.mlstm_prefill(p, x, mid1, H,
+                             lengths=jnp.asarray([4, 11, 8], jnp.int32),
+                             use_scan_op=True)
+    np.testing.assert_array_equal(np.asarray(y0, np.float32),
+                                  np.asarray(y1, np.float32))
+    for k in e0:
+        np.testing.assert_array_equal(np.asarray(e0[k]), np.asarray(e1[k]))

@@ -1,7 +1,7 @@
 """CI gate over the serving benchmark artifacts (stdlib only).
 
     python tools/check_bench.py NEW.json [BASELINE.json] \
-        [CLUSTER_NEW.json] [FLEET_NEW.json]
+        [CLUSTER_NEW.json] [FLEET_NEW.json] [KERNELS_NEW.json]
 
 Asserts, against the fresh ``bench_serving.py --json`` output:
 
@@ -58,11 +58,24 @@ artifact must fail, not silently un-gate city-scale serving):
    ``BENCH_TOLERANCE`` regression check against the committed
    baseline's ``fleet.scaling`` rows.
 
+And, when a fresh ``bench_kernels.py --json`` artifact is given (MANDATORY
+whenever the committed baseline carries a ``kernels`` section — the fused
+decode tail must stay gated once it has ever been benchmarked):
+
+10. ``mega_parity_ok`` — the fused boundary+norm+head+argmax tick must
+    produce exactly the tokens the unfused three-dispatch chain produces
+    (an in-run bit-identity check);
+11. ``mega_speedup`` — the fused tick must beat the unfused chain by at
+    least ``MEGA_FLOOR`` (an in-run same-box ratio, like
+    ``MIN_LOOP_SPEEDUP``), plus the usual ``BENCH_TOLERANCE`` regression
+    check of ``mega_fused_tick_us`` against the committed baseline.
+
 Environment overrides: ``MIN_LOOP_SPEEDUP`` (default 1.15),
 ``BENCH_TOLERANCE`` (default 0.3), ``SCALE_FLOOR`` (default 0.5),
 ``FLEET_FLOOR`` (default 0.5), ``SHARD_FLOOR`` (default 0.1),
-``REQUIRE_SLOT_SCALING`` (default unset), ``FLEET_OPTIONAL`` (default
-unset — set to 1 in jobs that legitimately skip the fleet bench).
+``MEGA_FLOOR`` (default 1.0), ``REQUIRE_SLOT_SCALING`` (default unset),
+``FLEET_OPTIONAL`` / ``KERNELS_OPTIONAL`` (default unset — set to 1 in
+jobs that legitimately skip the fleet / kernel bench).
 """
 from __future__ import annotations
 
@@ -185,6 +198,52 @@ def check_fleet(fl: dict | None, baseline: dict | None) -> list:
                     f"{row['decode_tok_per_s']} tok/s regressed below "
                     f"{floor:.1f} ({tolerance} x baseline "
                     f"{base['decode_tok_per_s']})")
+    return failures
+
+
+def check_kernels(kn: dict | None, baseline: dict | None) -> list:
+    """Gates over the ``bench_kernels.py --json`` artifact. The committed
+    baseline's ``kernels`` section makes the artifact mandatory — the
+    megakernel's fused-vs-unfused win must stay gated once benchmarked."""
+    failures = []
+    mega_floor = float(os.environ.get("MEGA_FLOOR", "1.0"))
+    tolerance = float(os.environ.get("BENCH_TOLERANCE", "0.3"))
+    base_kn = (baseline or {}).get("kernels")
+    if kn is None:
+        if base_kn is not None \
+                and os.environ.get("KERNELS_OPTIONAL") != "1":
+            failures.append("kernels artifact missing but the committed "
+                            "baseline has a kernels section — run "
+                            "bench_kernels.py --json and pass its JSON "
+                            "(or set KERNELS_OPTIONAL=1)")
+        return failures
+
+    if not kn.get("mega_parity_ok"):
+        failures.append(
+            "fused decode tail diverged from the unfused "
+            "boundary+head+argmax chain — the megakernel path must be "
+            "token-identical before its timing means anything")
+    if not kn.get("boundary_mixed_parity_ok"):
+        failures.append("interpret-mode boundary kernel diverged from "
+                        "the jnp reference")
+    speedup = kn.get("mega_speedup")
+    if speedup is None:
+        failures.append("mega_speedup missing from the kernels artifact")
+    elif speedup < mega_floor:
+        failures.append(
+            f"fused decode tick speedup {speedup:.2f}x fell below the "
+            f"{mega_floor}x floor (fused {kn.get('mega_fused_tick_us')} "
+            f"us vs unfused {kn.get('mega_unfused_chain_us')} us — the "
+            "megakernel must not lose to the chain it replaced)")
+    if base_kn is not None:
+        base_us = base_kn.get("mega_fused_tick_us")
+        new_us = kn.get("mega_fused_tick_us")
+        if base_us and new_us is not None \
+                and new_us > base_us / tolerance:
+            failures.append(
+                f"fused decode tick {new_us:.0f} us regressed above "
+                f"{base_us / tolerance:.0f} (baseline {base_us:.0f} / "
+                f"tolerance {tolerance})")
     return failures
 
 
@@ -316,8 +375,11 @@ def main(argv) -> int:
     baseline = json.load(open(argv[2])) if len(argv) > 2 else None
     cluster = json.load(open(argv[3])) if len(argv) > 3 else None
     fleet = json.load(open(argv[4])) if len(argv) > 4 else None
+    kernels_art = json.load(open(argv[5])) if len(argv) > 5 else None
+    kernels = (kernels_art or {}).get("kernels")
     failures = check(new, baseline)
     failures += check_fleet(fleet, baseline)
+    failures += check_kernels(kernels, baseline)
     summary = {
         "engine_comparison": new.get("engine_comparison"),
         "levels": [{k: l[k] for k in ("offered_load_req_per_tick",
@@ -347,6 +409,11 @@ def main(argv) -> int:
             {k: r[k] for k in ("ues", "decode_tok_per_s",
                                "session_slo_miss_rate")}
             for r in fleet.get("scaling", [])]
+    if kernels is not None:
+        summary["kernels"] = {k: kernels.get(k)
+                              for k in ("mega_fused_tick_us",
+                                        "mega_unfused_chain_us",
+                                        "mega_speedup", "mega_parity_ok")}
     print(json.dumps(summary, indent=1))
     for f in failures:
         print(f"BENCH CHECK FAILED: {f}", file=sys.stderr)
