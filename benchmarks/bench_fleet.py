@@ -28,7 +28,6 @@ from __future__ import annotations
 
 import argparse
 import json
-import time
 
 import jax
 import numpy as np
@@ -40,7 +39,8 @@ from repro.core.channel import FleetChannel
 from repro.data.lumos5g import capacity_traces_bps
 from repro.serving import (Autoscaler, AutoscalerConfig, EdgeCluster,
                            FleetLoadConfig, SLOAdmission,
-                           SLOAdmissionConfig, fleet_requests)
+                           SLOAdmissionConfig, Telemetry, fleet_requests)
+from repro.serving.telemetry import Stopwatch
 
 #: arrival span for the scaling sweep — offered load = n_ues / SPAN_TICKS
 SPAN_TICKS = 512
@@ -95,14 +95,16 @@ def run_scaling(params, cfg, ue_counts, *, n_replicas: int, n_slots: int,
             vocab=cfg.vocab_size, slo_ticks=slo_ticks, seed=seed)
         reqs = fleet_requests(fleet, load)
         gate = SLOAdmission(min_pay, SLOAdmissionConfig())
+        tel = Telemetry()
         cluster = EdgeCluster(
             params, cfg, n_replicas=n_replicas, n_slots=n_slots,
             cache_len=max(32, 2 * (prompt_len + gen)),
-            admission=gate, max_pending=max(256, 8 * n_slots))
+            admission=gate, max_pending=max(256, 8 * n_slots),
+            telemetry=tel)
         cluster.warm(reqs[0].prompt)
-        t0 = time.perf_counter()
-        cluster.run_paced(reqs)
-        wall = time.perf_counter() - t0
+        with Stopwatch() as sw:
+            cluster.run_paced(reqs)
+        wall = sw.seconds
         st = cluster.stats()
         cluster.close()
         _assert_conserved(st)
@@ -118,6 +120,9 @@ def run_scaling(params, cfg, ue_counts, *, n_replicas: int, n_slots: int,
             "session_slo_miss_rate": round(
                 st["session_slo_miss_rate"], 4),
             "wall_s": round(wall, 2),
+            "latency": tel.registry.latency_summary(
+                "engine.ttft_s", "engine.intertoken_s",
+                "engine.admit_to_first_token_s"),
         })
     return rows
 
@@ -162,14 +167,16 @@ def run_autoscale_ab(params, cfg, *, n_ues: int, n_slots: int,
         auto = Autoscaler(AutoscalerConfig(
             max_replicas=max_replicas, sustain_ticks=2, cooldown_ticks=4,
             high_occupancy=0.8)) if autoscale else None
+        tel = Telemetry()
         cluster = EdgeCluster(params, cfg, n_replicas=n_replicas,
                               n_slots=n_slots,
                               cache_len=max(32, 2 * (prompt_len + gen)),
-                              autoscaler=auto, max_pending=n_ues)
+                              autoscaler=auto, max_pending=n_ues,
+                              telemetry=tel)
         cluster.warm(reqs[0].prompt)
-        t0 = time.perf_counter()
-        cluster.run_paced(reqs)
-        wall = time.perf_counter() - t0
+        with Stopwatch() as sw:
+            cluster.run_paced(reqs)
+        wall = sw.seconds
         st = cluster.stats()
         cluster.close()
         _assert_conserved(st)
@@ -187,6 +194,8 @@ def run_autoscale_ab(params, cfg, *, n_ues: int, n_slots: int,
                 st["session_slo_miss_rate"], 4),
             "decode_tok_per_s": round(
                 st["decode_tokens"] / max(wall, 1e-9), 1),
+            "latency": tel.registry.latency_summary(
+                "engine.ttft_s", "engine.intertoken_s"),
         }
 
     auto = _run(1, autoscale=True)
@@ -244,6 +253,12 @@ def main(argv=None):
               f"tok/s={r['decode_tok_per_s']},"
               f"miss_rate={r['session_slo_miss_rate']},"
               f"wall={r['wall_s']}s")
+        ttft = r["latency"].get("engine.ttft_s")
+        itl = r["latency"].get("engine.intertoken_s")
+        if ttft and itl:
+            print(f"  latency,ues={r['ues']},"
+                  f"ttft_ms=p50:{ttft['p50']}/p99:{ttft['p99']},"
+                  f"intertoken_ms=p50:{itl['p50']}/p99:{itl['p99']}")
 
     ab = run_autoscale_ab(params, cfg, n_ues=args.ab_ues,
                           n_slots=args.n_slots,

@@ -10,22 +10,15 @@ Runs in CI as a smoke test:
 """
 from __future__ import annotations
 
-import time
 from typing import Dict
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels import ops, ref
-
-
-def _time(fn, *args, iters=20) -> float:
-    fn(*args)                          # compile
-    t0 = time.perf_counter()
-    for _ in range(iters):
-        out = fn(*args)
-    jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / iters * 1e6   # us
+# the shared best-of timing helper (one warmup/compile call, then the
+# minimum over iters with per-call block_until_ready)
+from repro.serving.telemetry import time_us as _time
 
 
 def run() -> Dict:

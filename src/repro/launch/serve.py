@@ -26,7 +26,6 @@ from __future__ import annotations
 
 import argparse
 import json
-import time
 
 import jax
 import jax.numpy as jnp
@@ -47,7 +46,9 @@ from repro.serving import (HANDOVER_POLICIES, PLACEMENTS,
                            ContinuousBatchingEngine, ControllerConfig,
                            EdgeCluster, FleetLoadConfig, ModeController,
                            Request, SLOAdmission, SLOAdmissionConfig,
-                           ServingEngine, fleet_requests)
+                           ServingEngine, Telemetry, fleet_requests,
+                           profile_capture)
+from repro.serving.telemetry import Stopwatch
 from repro.training import checkpoint
 
 
@@ -80,7 +81,17 @@ def _build_mesh(args):
     return serving_mesh(dp, mp)
 
 
-def run_continuous(args, cfg, params):
+def _latency_section(tel) -> dict:
+    """Millisecond percentile summary of the run's latency histograms
+    (empty without --telemetry)."""
+    if tel is None:
+        return {}
+    return {"latency": tel.registry.latency_summary(
+        "engine.ttft_s", "engine.intertoken_s",
+        "engine.admit_to_first_token_s", "cluster.migration_backhaul_s")}
+
+
+def run_continuous(args, cfg, params, tel=None):
     orch = build_orchestrator(cfg, 1, args.latency_budget_ms / 1e3,
                               hysteresis=1.0)
     chans = channel_fleet(
@@ -104,26 +115,28 @@ def run_continuous(args, cfg, params):
         kw["freeze_modes"] = args.mode_policy == "frozen"
     eng = ContinuousBatchingEngine(params, cfg, n_slots=args.n_slots,
                                    cache_len=args.cache_len,
-                                   mesh=_build_mesh(args), **kw)
+                                   mesh=_build_mesh(args), telemetry=tel,
+                                   **kw)
     # warm the compiled prefill/decode paths (every prefill batch bucket)
     # so decode_tok_per_s measures steady-state serving — the sync engine
     # likewise excludes its one-time prefill/trace cost from the decode rate
     eng.warm(np.asarray(batch[0]))
 
-    t0 = time.time()
-    done = eng.run(reqs)
-    wall = time.time() - t0
+    with Stopwatch() as sw:
+        done = eng.run(reqs)
     st = eng.stats()
     return {
         "engine": "continuous",
         "n_slots": args.n_slots,
-        "decode_tok_per_s": round(st["decode_tokens"] / max(wall, 1e-9), 1),
+        "decode_tok_per_s": round(
+            st["decode_tokens"] / max(sw.seconds, 1e-9), 1),
         "per_request": [s.result() for s in done[:4]],
+        **_latency_section(tel),
         **st,
     }
 
 
-def run_cluster(args, cfg, params):
+def run_cluster(args, cfg, params, tel=None):
     """Multi-replica edge cluster on scripted mobility: each UE starts in
     its home cell and crosses into the next cell partway through its
     generation, so every session exercises the configured handover policy
@@ -149,24 +162,25 @@ def run_cluster(args, cfg, params):
         handover=args.handover, snapshot_bits=args.snapshot_bits,
         backhaul_bps=args.backhaul_mbps * 1e6 / 8.0,
         latency_budget_s=args.latency_budget_ms / 1e3,
-        dp=args.dp, mp=args.mp)
+        telemetry=tel, dp=args.dp, mp=args.mp)
     # warm every replica's compiled paths so decode_tok_per_s measures
     # steady-state serving, same as the continuous-engine path
     cluster.warm(np.asarray(batch[0]))
-    t0 = time.time()
-    done = cluster.run(reqs)
-    wall = time.time() - t0
+    with Stopwatch() as sw:
+        done = cluster.run(reqs)
     st = cluster.stats()
     cluster.close()
     return {
         "engine": "cluster",
-        "decode_tok_per_s": round(st["decode_tokens"] / max(wall, 1e-9), 1),
+        "decode_tok_per_s": round(
+            st["decode_tokens"] / max(sw.seconds, 1e-9), 1),
         "per_request": [s.result() for s in done[:4]],
+        **_latency_section(tel),
         **st,
     }
 
 
-def run_fleet(args, cfg, params):
+def run_fleet(args, cfg, params, tel=None):
     """City-fleet serving: every UE rides one lane of a single vectorized
     ``FleetChannel`` replaying Lumos5G-resampled capacity traces (no
     per-UE Python channel objects), arrivals come from a Poisson or
@@ -194,11 +208,11 @@ def run_fleet(args, cfg, params):
         admission=SLOAdmission(min_payload, SLOAdmissionConfig(
             latency_budget_s=args.latency_budget_ms / 1e3)),
         autoscaler=autoscaler,
+        telemetry=tel,
         max_pending=max(n, 64))
     cluster.warm(reqs[0].prompt)
-    t0 = time.time()
-    done = cluster.run_paced(reqs)
-    wall = time.time() - t0
+    with Stopwatch() as sw:
+        done = cluster.run_paced(reqs)
     st = cluster.stats()
     cluster.close()
     return {
@@ -206,21 +220,23 @@ def run_fleet(args, cfg, params):
         "n_ues": n,
         "arrival": args.arrival,
         "autoscale": bool(args.autoscale),
-        "decode_tok_per_s": round(st["decode_tokens"] / max(wall, 1e-9), 1),
+        "decode_tok_per_s": round(
+            st["decode_tokens"] / max(sw.seconds, 1e-9), 1),
         "admission": cluster.admission.stats(),
         "per_request": [s.result() for s in done[:2]],
+        **_latency_section(tel),
         **st,
     }
 
 
-def run_sync(args, cfg, params):
+def run_sync(args, cfg, params, tel=None):
     orch = None
     if args.policy == "orchestrator":
         orch = build_orchestrator(cfg, args.requests,
                                   args.latency_budget_ms / 1e3)
     eng = ServingEngine(params, cfg, cache_len=args.cache_len,
                         batch=args.requests, orchestrator=orch,
-                        mesh=_build_mesh(args))
+                        mesh=_build_mesh(args), telemetry=tel)
 
     # batched request prompts
     src = tokens.MarkovTokenSource(cfg, seed=7)
@@ -228,36 +244,38 @@ def run_sync(args, cfg, params):
         src.batch(args.requests, args.prompt_len)["tokens"])
     chan = Channel(ChannelConfig(seed=args.channel_seed))
 
-    t0 = time.time()
-    logits = eng.prefill(prompt)
-    first = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-    t_prefill = time.time() - t0
+    with Stopwatch() as sw:
+        logits = eng.prefill(prompt)
+        first = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        t_prefill = sw.lap()
 
-    if args.policy.startswith("static"):
-        # same cache-wraparound guard ServingEngine.decode_tokens
-        # applies on the orchestrator path
-        T.check_cache_capacity(cfg, eng.pos, args.gen, args.cache_len,
-                               what="--gen")
-        mode = int(args.policy[-1])
-        out, wire = [], 0
-        tok = first
-        for _ in range(args.gen):
-            logits, eng.states, pb = SP.split_decode_step(
-                params, tok, eng.states, jnp.int32(eng.pos), cfg, mode=mode)
-            eng.pos += 1
-            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-            out.append(np.asarray(tok))
-            wire += int(pb)
-        gen = np.concatenate(out, axis=-1)
-        stats = {"tokens": int(gen.size), "wire_bytes": wire,
-                 "mode_counts": {mode: args.gen}}
-    else:
-        gen = eng.decode_tokens(first, args.gen, capacity_bps_fn=chan.step)
-        stats = {"tokens": eng.stats.tokens,
-                 "wire_bytes": eng.stats.wire_bytes,
-                 "mode_counts": eng.stats.mode_counts,
-                 "mode_switches": orch.state.switches}
-    t_total = time.time() - t0
+        if args.policy.startswith("static"):
+            # same cache-wraparound guard ServingEngine.decode_tokens
+            # applies on the orchestrator path
+            T.check_cache_capacity(cfg, eng.pos, args.gen, args.cache_len,
+                                   what="--gen")
+            mode = int(args.policy[-1])
+            out, wire = [], 0
+            tok = first
+            for _ in range(args.gen):
+                logits, eng.states, pb = SP.split_decode_step(
+                    params, tok, eng.states, jnp.int32(eng.pos), cfg,
+                    mode=mode)
+                eng.pos += 1
+                tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                out.append(np.asarray(tok))
+                wire += int(pb)
+            gen = np.concatenate(out, axis=-1)
+            stats = {"tokens": int(gen.size), "wire_bytes": wire,
+                     "mode_counts": {mode: args.gen}}
+        else:
+            gen = eng.decode_tokens(first, args.gen,
+                                    capacity_bps_fn=chan.step)
+            stats = {"tokens": eng.stats.tokens,
+                     "wire_bytes": eng.stats.wire_bytes,
+                     "mode_counts": eng.stats.mode_counts,
+                     "mode_switches": orch.state.switches}
+    t_total = sw.seconds
 
     toks = args.requests * args.gen
     return {
@@ -335,6 +353,15 @@ def main(argv=None):
                     help="serving mesh: tensor-parallel axis — decoder "
                          "heads/FFN shard over mp (reassociates "
                          "reductions; dp alone stays bit-identical)")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="attach the metrics registry + trace recorder "
+                         "(latency percentiles land in the summary)")
+    ap.add_argument("--trace-out", default=None,
+                    help="write a Perfetto-loadable Chrome trace JSON "
+                         "here (implies --telemetry)")
+    ap.add_argument("--profile-dir", default=None,
+                    help="capture a jax.profiler trace of the run into "
+                         "this directory")
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--json-out", default=None)
     args = ap.parse_args(argv)
@@ -349,10 +376,16 @@ def main(argv=None):
         params = checkpoint.restore(args.ckpt, params)
         print(f"loaded weights from {args.ckpt}")
 
+    tel = (Telemetry() if (args.telemetry or args.trace_out) else None)
     runner = {"sync": run_sync, "continuous": run_continuous,
               "cluster": run_cluster, "fleet": run_fleet}[args.engine]
-    summary = runner(args, cfg, params)
+    with profile_capture(args.profile_dir):
+        summary = runner(args, cfg, params, tel)
     summary = {"arch": args.arch, **summary}
+    if args.trace_out and tel is not None:
+        tel.trace.export(args.trace_out)
+        summary["trace_out"] = args.trace_out
+        summary["trace_events"] = len(tel.trace.events())
     print(json.dumps(summary, indent=1, default=str))
     if args.json_out:
         with open(args.json_out, "w") as f:

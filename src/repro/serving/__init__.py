@@ -30,6 +30,14 @@
                                 pools), optional wire quantization,
                                 bit-exact injection on the target replica.
 ``session``                   — request/queue/session lifecycle records.
+``telemetry``                 — observability: ``MetricsRegistry``
+                                (counters/gauges/log-bucketed histograms
+                                with p50/p90/p99, JSON + Prometheus
+                                export), ``TraceRecorder`` (Perfetto-
+                                loadable Chrome trace timeline with
+                                per-replica lanes), the shared monotonic
+                                serving clock, and the bench timing
+                                helpers; see docs/observability.md.
 
 See docs/serving.md for the request lifecycle and slot-pool design,
 docs/cluster.md for the multi-replica router and handover semantics, and
@@ -52,3 +60,6 @@ from repro.serving.migration import (MigrationSnapshot,  # noqa: F401
                                      inject_session)
 from repro.serving.session import (Request, RequestQueue,  # noqa: F401
                                    Session)
+from repro.serving.telemetry import (MetricsRegistry,  # noqa: F401
+                                     Telemetry, TraceRecorder,
+                                     profile_capture)

@@ -86,6 +86,7 @@ from repro.models import sharding
 from repro.models import transformer as T
 from repro.serving.controller import ModeController
 from repro.serving.session import Request, RequestQueue, Session
+from repro.serving.telemetry import Telemetry, now as _now
 
 
 def _slot_axis(cfg: ModelConfig) -> int:
@@ -196,7 +197,7 @@ class _EngineSteps:
 
 
 def _window_scan_body(cfg: ModelConfig, mesh, *, mixed: bool,
-                      fused_tail: bool):
+                      fused_tail: bool, telemetry: bool = False):
     """The ONE place the device-resident decode window's scan body is
     defined — shared by the dense and paged step builders (``bt=None``
     selects dense) and by the plain and mixed variants.
@@ -210,8 +211,17 @@ def _window_scan_body(cfg: ModelConfig, mesh, *, mixed: bool,
     into the next tick's embed — no separate head/argmax/feedback HLOs and
     no [B, V] f32 logits in HBM. ``fused_tail=False`` keeps the legacy
     logits+argmax body: the equivalence oracle ``tests/test_device_loop.py``
-    pins token streams against."""
-    def run(params, stacked, tok, states, positions, modes_k, bt):
+    pins token streams against.
+
+    ``telemetry``: the body additionally emits a per-tick int32 telemetry
+    row ``[wire_bytes, live_slots, mode_hist[0..M-1]]`` computed from the
+    window's frozen live mask (``active``) and the per-mode payload table
+    (``pb_table``) — stacked to a ``[K, 2 + M]`` block that rides the scan
+    OUTPUT (result index 4) and is folded into the metrics registry one
+    window late, exactly like token values. Pure integer arithmetic on
+    inputs the untraced body already has: token bits are untouched."""
+    def run(params, stacked, tok, states, positions, modes_k, bt,
+            pb_table=None, active=None):
         def body(carry, modes):
             tok, states, positions = carry
             if mixed:
@@ -224,33 +234,55 @@ def _window_scan_body(cfg: ModelConfig, mesh, *, mixed: bool,
                     return_tokens=fused_tail)
             nxt = out if fused_tail else jnp.argmax(out, axis=-1)
             nxt = nxt.astype(jnp.int32).reshape(tok.shape)
+            if telemetry:
+                row = jnp.concatenate([
+                    jnp.sum(active * pb_table[modes])[None],
+                    jnp.sum(active)[None],
+                    jnp.zeros(pb_table.shape[0], jnp.int32)
+                       .at[modes].add(active),
+                ]).astype(jnp.int32)
+                return (nxt, new_states, positions + 1), (nxt, row)
             return (nxt, new_states, positions + 1), nxt
 
-        carry, toks = jax.lax.scan(body, (tok, states, positions), modes_k)
-        return (*carry, toks)
+        carry, out = jax.lax.scan(body, (tok, states, positions), modes_k)
+        if telemetry:
+            toks, tel = out
+            return (*carry, toks, tel)
+        return (*carry, out)
 
     return run
 
 
 def _paged_steps(cfg: ModelConfig, mixed: bool, mesh=None,
-                 fused_tail: bool = True) -> _EngineSteps:
+                 fused_tail: bool = True,
+                 telemetry: bool = False) -> _EngineSteps:
     """Paged variants of the engine closures: every decode step threads the
     ``[B, nb]`` block table through to the paged attention path, and
     prefill writes straight into the (donated) page arena through the
     group's block tables instead of materializing dense per-row caches.
     The closures are shape-polymorphic in the table width (pow2-bucketed by
     the pool), so one set serves every arena size. ``mesh`` builds the
-    sharded variants (see :func:`_compiled_steps`)."""
+    sharded variants (see :func:`_compiled_steps`); ``telemetry`` the
+    instrumented window bodies (two trailing ``pb_table``/``active``
+    args ahead of ``bt``)."""
     run_mono = _window_scan_body(cfg, mesh, mixed=False,
-                                 fused_tail=fused_tail)
+                                 fused_tail=fused_tail, telemetry=telemetry)
 
     @jax.jit
     def mono_step(params, tok, states, pos, bt):
         return T.decode_step(params, tok, states, pos, cfg, block_table=bt)
 
-    @functools.partial(jax.jit, donate_argnums=(2, 3))
-    def mono_step_dev(params, tok, states, positions, modes_k, bt):
-        return run_mono(params, None, tok, states, positions, modes_k, bt)
+    if telemetry:
+        @functools.partial(jax.jit, donate_argnums=(2, 3))
+        def mono_step_dev(params, tok, states, positions, modes_k,
+                          pb_table, active, bt):
+            return run_mono(params, None, tok, states, positions, modes_k,
+                            bt, pb_table, active)
+    else:
+        @functools.partial(jax.jit, donate_argnums=(2, 3))
+        def mono_step_dev(params, tok, states, positions, modes_k, bt):
+            return run_mono(params, None, tok, states, positions, modes_k,
+                            bt)
 
     @functools.partial(jax.jit, donate_argnums=(3,))
     def mono_prefill(params, toks, lengths, arena, bt):
@@ -262,7 +294,7 @@ def _paged_steps(cfg: ModelConfig, mixed: bool, mesh=None,
         return _EngineSteps(mono_step, mono_step_dev, mono_prefill)
 
     run_mixed = _window_scan_body(cfg, mesh, mixed=True,
-                                  fused_tail=fused_tail)
+                                  fused_tail=fused_tail, telemetry=telemetry)
 
     @jax.jit
     def mixed_step(params, stacked, tok, states, positions, modes, bt):
@@ -270,10 +302,18 @@ def _paged_steps(cfg: ModelConfig, mixed: bool, mesh=None,
                                           positions, cfg, modes,
                                           block_table=bt, mesh=mesh)
 
-    @functools.partial(jax.jit, donate_argnums=(3, 4))
-    def mixed_step_dev(params, stacked, tok, states, positions, modes_k, bt):
-        return run_mixed(params, stacked, tok, states, positions, modes_k,
-                         bt)
+    if telemetry:
+        @functools.partial(jax.jit, donate_argnums=(3, 4))
+        def mixed_step_dev(params, stacked, tok, states, positions,
+                           modes_k, pb_table, active, bt):
+            return run_mixed(params, stacked, tok, states, positions,
+                             modes_k, bt, pb_table, active)
+    else:
+        @functools.partial(jax.jit, donate_argnums=(3, 4))
+        def mixed_step_dev(params, stacked, tok, states, positions,
+                           modes_k, bt):
+            return run_mixed(params, stacked, tok, states, positions,
+                             modes_k, bt)
 
     @functools.partial(jax.jit, donate_argnums=(4,))
     def mixed_prefill(params, stacked, toks, lengths, arena, modes, bt):
@@ -289,7 +329,8 @@ def _paged_steps(cfg: ModelConfig, mixed: bool, mesh=None,
 @functools.lru_cache(maxsize=None)
 def _compiled_steps(cfg: ModelConfig, cache_len: int, mixed: bool,
                     paged: bool = False, mesh=None,
-                    fused_tail: bool = True) -> _EngineSteps:
+                    fused_tail: bool = True,
+                    telemetry: bool = False) -> _EngineSteps:
     """Build (once per ``(cfg, cache_len)``) the jitted decode/prefill
     closures every ``ContinuousBatchingEngine`` runs on. Cached at module
     level so N engines of the same configuration — a cluster's replicas,
@@ -311,12 +352,17 @@ def _compiled_steps(cfg: ModelConfig, cache_len: int, mixed: bool,
 
     ``fused_tail`` (part of the cache key) selects the fused decode-tail
     window body — see :func:`_window_scan_body`; ``False`` builds the
-    legacy logits+argmax loop the device-loop equivalence tests run."""
+    legacy logits+argmax loop the device-loop equivalence tests run.
+
+    ``telemetry`` (part of the cache key — instrumented and plain engines
+    must not share traced functions) builds the window bodies that emit
+    the per-tick int32 telemetry block; the dev steps then take two extra
+    args (``pb_table [M]``, ``active [B]``) after the mode matrix."""
     if paged:
-        return _paged_steps(cfg, mixed, mesh, fused_tail)
+        return _paged_steps(cfg, mixed, mesh, fused_tail, telemetry)
 
     run_mono = _window_scan_body(cfg, mesh, mixed=False,
-                                 fused_tail=fused_tail)
+                                 fused_tail=fused_tail, telemetry=telemetry)
 
     @jax.jit
     def mono_step(params, tok, states, pos):
@@ -331,10 +377,17 @@ def _compiled_steps(cfg: ModelConfig, cache_len: int, mixed: bool,
     # on token values), so the host precomputes the window and reads
     # the [K, B] token block back one window late. Free slots ride
     # along (their positions drift, but admission rewrites them).
-    @functools.partial(jax.jit, donate_argnums=(2, 3))
-    def mono_step_dev(params, tok, states, positions, modes_k):
-        return run_mono(params, None, tok, states, positions, modes_k,
-                        None)
+    if telemetry:
+        @functools.partial(jax.jit, donate_argnums=(2, 3))
+        def mono_step_dev(params, tok, states, positions, modes_k,
+                          pb_table, active):
+            return run_mono(params, None, tok, states, positions, modes_k,
+                            None, pb_table, active)
+    else:
+        @functools.partial(jax.jit, donate_argnums=(2, 3))
+        def mono_step_dev(params, tok, states, positions, modes_k):
+            return run_mono(params, None, tok, states, positions, modes_k,
+                            None)
 
     @jax.jit
     def mono_prefill(params, toks, lengths):
@@ -357,12 +410,20 @@ def _compiled_steps(cfg: ModelConfig, cache_len: int, mixed: bool,
                                           mesh=mesh)
 
     run_mixed = _window_scan_body(cfg, mesh, mixed=True,
-                                  fused_tail=fused_tail)
+                                  fused_tail=fused_tail, telemetry=telemetry)
 
-    @functools.partial(jax.jit, donate_argnums=(3, 4))
-    def mixed_step_dev(params, stacked, tok, states, positions, modes_k):
-        return run_mixed(params, stacked, tok, states, positions, modes_k,
-                         None)
+    if telemetry:
+        @functools.partial(jax.jit, donate_argnums=(3, 4))
+        def mixed_step_dev(params, stacked, tok, states, positions,
+                           modes_k, pb_table, active):
+            return run_mixed(params, stacked, tok, states, positions,
+                             modes_k, None, pb_table, active)
+    else:
+        @functools.partial(jax.jit, donate_argnums=(3, 4))
+        def mixed_step_dev(params, stacked, tok, states, positions,
+                           modes_k):
+            return run_mixed(params, stacked, tok, states, positions,
+                             modes_k, None)
 
     @jax.jit
     def mixed_prefill(params, stacked, toks, lengths, modes):
@@ -696,7 +757,8 @@ class ContinuousBatchingEngine:
                  page_len: int = 8,
                  n_pages: Optional[int] = None,
                  mesh=None,
-                 fused_tail: bool = True):
+                 fused_tail: bool = True,
+                 telemetry: Optional[Telemetry] = None):
         if controller is not None:
             if freeze_modes:
                 raise ValueError("controller and freeze_modes are mutually "
@@ -769,9 +831,14 @@ class ContinuousBatchingEngine:
         # kernel (see _window_scan_body); False keeps the legacy
         # logits+argmax window — the token-identity oracle in tests
         self.fused_tail = bool(fused_tail)
+        # telemetry is OPTIONAL and additive: None (the default) compiles
+        # and runs the exact pre-telemetry engine; a Telemetry object
+        # selects the instrumented window bodies (a separate compile-cache
+        # entry) and turns on the guarded host-side observations below
+        self._tel = telemetry
         steps = _compiled_steps(cfg, cache_len,
                                 self.stacked_bank is not None, self.paged,
-                                mesh, self.fused_tail)
+                                mesh, self.fused_tail, self._tel is not None)
         self.host_loop = host_loop
         self.max_window = max(int(max_window), 1)
         if not host_loop:
@@ -823,11 +890,32 @@ class ContinuousBatchingEngine:
         self._mixed_step_dev = steps.mixed_step_dev
         self._mixed_prefill = steps.mixed_prefill
 
+        #: host-side fold of the device telemetry blocks (wire bytes,
+        #: decoded slot-ticks, per-mode tick histogram) — the oracle the
+        #: telemetry tests cross-check against host wire accounting
+        self.device_tel = {"wire_bytes": 0, "slot_ticks": 0,
+                           "mode_ticks": np.zeros(0, np.int64)}
+        self._pb_table = None
+        if self._tel is not None:
+            n_modes = (cfg.split.n_modes
+                       if self.stacked_bank is not None else 1)
+            self.device_tel["mode_ticks"] = np.zeros(n_modes, np.int64)
+            self._pb_table = sharding.replicate(
+                jnp.asarray([self._payload_bytes(m)
+                             for m in range(n_modes)], jnp.int32), mesh)
+            if self.controller is not None:
+                tel = self._tel
+                self.controller.on_escalate = (
+                    lambda rid, tick, frm, to: (
+                        tel.inc("engine.mode_escalations"),
+                        tel.instant("mode_escalate", rid=rid, tick=tick,
+                                    cat="mode", frm=frm, to=to)))
+
     # -- submission -----------------------------------------------------------
     def submit(self, req: Request) -> bool:
         """Queue a request for its arrival tick. Returns False if the
         admission queue rejected it (back-pressure)."""
-        req.t_submit = time.monotonic()
+        req.t_submit = _now()
         if req.arrival_tick > self.tick:
             heapq.heappush(self._pending,
                            (req.arrival_tick, self._pending_seq, req))
@@ -840,7 +928,7 @@ class ContinuousBatchingEngine:
         # old sort-by-arrival_tick drain (Python sorts are stable)
         while self._pending and self._pending[0][0] <= self.tick:
             r = heapq.heappop(self._pending)[2]
-            r.t_submit = time.monotonic()
+            r.t_submit = _now()
             self.queue.submit(r)
 
     # -- admission ------------------------------------------------------------
@@ -873,6 +961,10 @@ class ContinuousBatchingEngine:
                     # rolling cache over its own context — reject instead
                     self.queue.pop()
                     self.requests_over_capacity += 1
+                    if self._tel is not None:
+                        self._tel.instant("reject_over_capacity",
+                                          cat="admission", rid=req.rid,
+                                          prompt_len=req.prompt_len)
                     continue
                 # the first generated token is the prefill argmax (no cache
                 # write); decode writes land at prompt_len..prompt_len+b-2,
@@ -892,8 +984,14 @@ class ContinuousBatchingEngine:
                     if req.rid not in self._parked_rids:
                         self._parked_rids.add(req.rid)
                         self.requests_parked += 1
+                        if self._tel is not None:
+                            self._tel.instant(
+                                "park_arena", cat="admission", rid=req.rid,
+                                pages_needed=worst,
+                                pages_available=self.pool.pages_available)
                     break
             self.queue.pop()
+            req.t_admit = _now()
             if budget < req.max_new_tokens:
                 self.requests_truncated += 1
             slot = self.pool.acquire()
@@ -924,6 +1022,7 @@ class ContinuousBatchingEngine:
         prompts right-padded to ``blen``, batch padded to a power of two,
         each row's boundary routed through its admission-chosen mode."""
         n = len(group)
+        t_pre = _now() if self._tel is not None else 0.0
         bp = _bucket_len(n, lo=1)          # pow2 batch: bounded compile set
         audio = (self.cfg.frontend == "audio" and self.cfg.n_codebooks > 1)
         shape = (bp, self.cfg.n_codebooks, blen) if audio else (bp, blen)
@@ -968,7 +1067,11 @@ class ContinuousBatchingEngine:
         # this materializes a tiny int32 array (once per admitted bucket,
         # not once per decode tick)
         first = np.asarray(first_dev, np.int32)
-        now = time.monotonic()
+        now = _now()
+        if self._tel is not None:
+            self._tel.complete("prefill", t_pre, now - t_pre, cat="window",
+                               rows=n, bucket=blen)
+            self._tel.observe("engine.prefill_s", now - t_pre)
         slots = [a[1] for a in group]
         plens = [a[0].prompt_len for a in group]
         if self.paged:
@@ -1008,6 +1111,14 @@ class ContinuousBatchingEngine:
             sess.tokens.append(int(tok.reshape(-1)[0]) if tok.ndim
                                else int(tok))
             sess.ttft_s = now - req.t_submit if req.t_submit else 0.0
+            if self._tel is not None:
+                if req.t_submit:
+                    self._tel.observe("engine.ttft_s", sess.ttft_s)
+                if req.t_admit:
+                    self._tel.observe("engine.admit_to_first_token_s",
+                                      now - req.t_admit)
+                self._tel.instant("admit", cat="admission", rid=req.rid,
+                                  slot=slot, mode=mode, t=now)
             # the prompt's boundary activations cross the uplink once, in
             # the admission-chosen mode (and the prefill really ran them
             # through that mode's bottleneck head), with the transfer
@@ -1116,6 +1227,11 @@ class ContinuousBatchingEngine:
             else:
                 sess.account(0, self._payload_bytes(0), 0.0)
             if sess.mode_trace and sess.mode_trace[-1][1] != mode:
+                if self._tel is not None:
+                    self._tel.inc("engine.mode_switches")
+                    self._tel.instant("mode_switch", cat="mode",
+                                      rid=sess.request.rid, tick=tick,
+                                      frm=sess.mode_trace[-1][1], to=mode)
                 sess.mode_trace.append((tick, mode))
             modes[slot] = mode
         return modes
@@ -1146,6 +1262,7 @@ class ContinuousBatchingEngine:
                 return True
             return False
 
+        t0 = _now() if self._tel is not None else 0.0
         modes = self._choose_modes()
         bt = None
         if self.paged:
@@ -1177,6 +1294,22 @@ class ContinuousBatchingEngine:
                                                  self.pool.states, positions)
         self.pool.states = new_states
         nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+
+        if self._tel is not None:
+            # one synchronous host tick == one token per live slot
+            self._tel.observe("engine.intertoken_s", _now() - t0,
+                              len(self.active))
+            self._tel.set("engine.queue_depth", len(self.queue))
+            self._tel.set("engine.slot_occupancy",
+                          len(self.active) / self.pool.n_slots)
+            self._tel.inc("engine.decode_wire_bytes",
+                          sum(self._payload_bytes(int(modes[s]))
+                              for s in self.active))
+            self._tel.inc("engine.decode_tokens", len(self.active))
+            if self.paged:
+                self._tel.set("engine.page_occupancy",
+                              self.pool.pages_in_use
+                              / max(self.pool.n_pages, 1))
 
         self.decode_ticks += 1
         self.decoded_slot_ticks += len(self.active)
@@ -1239,6 +1372,7 @@ class ContinuousBatchingEngine:
                 return True
             return False
 
+        t0 = _now() if self._tel is not None else 0.0
         k = self._window_len()
         bt = None
         if self.paged:
@@ -1259,10 +1393,31 @@ class ContinuousBatchingEngine:
                                                items=snapshot)
                             for i in range(k)])
         prev = self._inflight
-        fut = self._dispatch_device_step(modes_k, bt)
+        active = None
+        if self._tel is not None:
+            # the live set is frozen per window — the int32 mask both
+            # masks free slots out of the device telemetry block and lets
+            # its wire sum match host accounting exactly
+            active = np.zeros(self.pool.n_slots, np.int32)
+            for slot, _ in snapshot:
+                active[slot] = 1
+        fut = self._dispatch_device_step(modes_k, bt, active)
         # snapshot BEFORE retirement: these sessions each emit one token
         # per window tick, whose values land at the next materialization
-        self._inflight = (snapshot, fut, k)
+        self._inflight = (snapshot, fut, k, _now() if self._tel is not None
+                          else 0.0)
+        if self._tel is not None:
+            self._tel.complete("window_dispatch", t0, _now() - t0,
+                               cat="window", k=k, live=len(snapshot),
+                               tick=self.tick)
+            self._tel.observe("engine.window_dispatch_s", _now() - t0)
+            self._tel.set("engine.queue_depth", len(self.queue))
+            self._tel.set("engine.slot_occupancy",
+                          len(snapshot) / self.pool.n_slots)
+            if self.paged:
+                self._tel.set("engine.page_occupancy",
+                              self.pool.pages_in_use
+                              / max(self.pool.n_pages, 1))
 
         self.decode_ticks += k
         self.decoded_slot_ticks += k * len(snapshot)
@@ -1292,15 +1447,18 @@ class ContinuousBatchingEngine:
         self.tick += k
         return True
 
-    def _dispatch_device_step(self, modes_k: np.ndarray,
-                              bt=None) -> _cf.Future:
+    def _dispatch_device_step(self, modes_k: np.ndarray, bt=None,
+                              active: Optional[np.ndarray] = None) \
+            -> _cf.Future:
         """Enqueue one fused decode window on the pipeline worker. The
         closure chains on the previous window's future (single worker =
         FIFO, so ``prev.result()`` never blocks the worker on unfinished
         work); the main thread returns immediately and keeps doing host
         bookkeeping while XLA executes. ``bt`` (paged pools) is the
         window's frozen block table — a fresh device buffer, never
-        donated."""
+        donated. ``active`` (telemetry engines) is the window's frozen
+        int32 live mask feeding the instrumented bodies' telemetry
+        block."""
         prev, cur = self._future, (self.cur_tokens, self.pool.states,
                                    self._positions)
         # [K, B]: the slot axis is axis 1 inside the window scan
@@ -1308,6 +1466,11 @@ class ContinuousBatchingEngine:
                                          axis=1)
         params, stacked = self.params, self.stacked_bank
         mixed, mono = self._mixed_step_dev, self._mono_step_dev
+        tel_args = ()
+        if self._tel is not None:
+            tel_args = (self._pb_table,
+                        sharding.shard_batch(jnp.asarray(active),
+                                             self.mesh))
 
         def work():
             tok, states, positions = prev.result()[:3] if prev is not None \
@@ -1315,12 +1478,14 @@ class ContinuousBatchingEngine:
             if mixed is not None:
                 if bt is not None:
                     return mixed(params, stacked, tok, states, positions,
-                                 modes_dev, bt)
+                                 modes_dev, *tel_args, bt)
                 return mixed(params, stacked, tok, states, positions,
-                             modes_dev)
+                             modes_dev, *tel_args)
             if bt is not None:
-                return mono(params, tok, states, positions, modes_dev, bt)
-            return mono(params, tok, states, positions, modes_dev)
+                return mono(params, tok, states, positions, modes_dev,
+                            *tel_args, bt)
+            return mono(params, tok, states, positions, modes_dev,
+                        *tel_args)
 
         fut = self._pipeline().submit(work)
         self._future = fut
@@ -1370,9 +1535,29 @@ class ContinuousBatchingEngine:
         """Host side of the lagged pipeline: copy one window's [K, B]
         int32 token block off the device and append it to the snapshot's
         sessions; sessions whose budget completed in that window move to
-        ``finished`` here (their slots were already freed at dispatch)."""
-        snapshot, fut, k = inflight
+        ``finished`` here (their slots were already freed at dispatch).
+        On telemetry engines the window's [K, 2 + M] int32 telemetry
+        block rides the same result and folds into the registry here —
+        one window late, exactly like token values."""
+        snapshot, fut, k, t_disp = inflight
+        t_mat = _now() if self._tel is not None else 0.0
         arr = np.asarray(fut.result()[3])            # [K, B, ...]
+        if self._tel is not None:
+            tel_blk = np.asarray(fut.result()[4], np.int64)  # [K, 2 + M]
+            wire = int(tel_blk[:, 0].sum())
+            slot_ticks = int(tel_blk[:, 1].sum())
+            self.device_tel["wire_bytes"] += wire
+            self.device_tel["slot_ticks"] += slot_ticks
+            self.device_tel["mode_ticks"] += tel_blk[:, 2:].sum(axis=0)
+            self._tel.inc("engine.decode_wire_bytes", wire)
+            self._tel.inc("engine.decode_tokens", slot_ticks)
+            # window wall clock (dispatch -> tokens on host) over k ticks
+            # IS the device loop's inter-token latency, weighted by the
+            # tokens the window produced
+            wall = _now() - t_disp
+            if slot_ticks:
+                self._tel.observe("engine.intertoken_s", wall / k,
+                                  slot_ticks)
         for slot, sess in snapshot:
             for i in range(k):
                 tok = arr[i, slot]
@@ -1381,6 +1566,11 @@ class ContinuousBatchingEngine:
             budget = sess.gen_budget or sess.request.max_new_tokens
             if len(sess.tokens) >= budget:
                 self.finished.append(sess)
+        if self._tel is not None:
+            dur = _now() - t_mat
+            self._tel.complete("window_materialize", t_mat, dur,
+                               cat="window", k=k)
+            self._tel.observe("engine.window_materialize_s", dur)
 
     def _materialize_inflight(self):
         if self._inflight is not None:
@@ -1402,9 +1592,11 @@ class ContinuousBatchingEngine:
                 break
             k <<= 1
         if not self.host_loop:
-            w = 2
+            w = 1
             while w <= self.max_window:
                 # budget w+1 = prefill token + exactly one window of w ticks
+                # (w starts at 1: single-tick windows occur at stream tails,
+                # and their scan otherwise compiles inside the measured run)
                 self.run([Request(rid=-1 - i, prompt=np.asarray(prompt),
                                   max_new_tokens=w + 1)
                           for i in range(self.pool.n_slots)])
@@ -1428,6 +1620,14 @@ class ContinuousBatchingEngine:
         if self.paged:
             self.pool.peak_pages_in_use = self.pool.pages_in_use
         self.queue.submitted = self.queue.rejected = 0
+        self.device_tel["wire_bytes"] = self.device_tel["slot_ticks"] = 0
+        self.device_tel["mode_ticks"] = np.zeros_like(
+            self.device_tel["mode_ticks"])
+        if self._tel is not None:
+            # shared across a cluster's replicas — a reset between warm-up
+            # and measurement clears everyone's warm data, which is what
+            # every caller wants (warm() runs before the measured window)
+            self._tel.registry.reset()
 
     def run(self, requests: Optional[List[Request]] = None,
             max_ticks: int = 100_000) -> List[Session]:
@@ -1471,7 +1671,7 @@ class ContinuousBatchingEngine:
                                    / max(self.pool.n_pages, 1)),
                 "requests_parked": self.requests_parked,
             }
-        return {
+        out = {
             "mode_policy": policy,
             "paged": self.paged,
             **paged_stats,
@@ -1502,3 +1702,10 @@ class ContinuousBatchingEngine:
             "mean_ttft_s": (float(np.mean([s.ttft_s for s in self.finished]))
                             if self.finished else 0.0),
         }
+        if self._tel is not None:
+            # mirror the legacy totals into the registry so the JSON /
+            # Prometheus exports always agree with this dict (the dict
+            # itself is computed exactly as before — key/value parity
+            # with telemetry off is pinned by tests)
+            self._tel.registry.ingest("engine.stats", out)
+        return out

@@ -92,6 +92,7 @@ from repro.serving.fleet import SLOAdmission
 from repro.serving.migration import (detach_session, extract_session,
                                      inject_session)
 from repro.serving.session import Request, Session
+from repro.serving.telemetry import Telemetry
 
 PLACEMENTS = ("least-loaded", "best-channel", "round-robin")
 HANDOVER_POLICIES = ("migrate", "stay", "drop")
@@ -141,6 +142,7 @@ class EdgeCluster:
                  make_orchestrator=None, make_controller=None,
                  admission: Optional[SLOAdmission] = None,
                  autoscaler: Optional[Autoscaler] = None,
+                 telemetry: Optional[Telemetry] = None,
                  dp: Optional[int] = None, mp: Optional[int] = None,
                  devices=None,
                  **engine_kwargs):
@@ -176,6 +178,14 @@ class EdgeCluster:
         self.backhaul_bps = float(backhaul_bps)
         self.admission = admission
         self.autoscaler = autoscaler
+        #: shared telemetry: lane 0 carries control-plane events
+        #: (admission, migration, autoscale); replica ``i`` writes lane
+        #: ``i + 1`` via its engine's Telemetry view (see ``_new_engine``)
+        self._tel = telemetry
+        if telemetry is not None:
+            telemetry.trace.set_lane(telemetry.lane, "cluster")
+            if admission is not None:
+                admission.telemetry = telemetry
         # replica-construction closure state: scale_up builds new engines
         # from exactly what __init__ built the originals from, so the
         # module-level _compiled_steps lru_cache hits (same cfg/cache_len/
@@ -234,6 +244,8 @@ class EdgeCluster:
 
     def _new_engine(self, i: int, mesh=None) -> ContinuousBatchingEngine:
         kw = dict(self._engine_kwargs)
+        if self._tel is not None:
+            kw["telemetry"] = self._tel.for_lane(i + 1, f"replica{i}")
         if self._make_controller is not None:
             ctl = self._make_controller(i)
             if ctl is not None:
@@ -338,7 +350,7 @@ class EdgeCluster:
             predicted_wait_ticks=self._predicted_wait_ticks(req),
             service_ticks=req.max_new_tokens,
             capacity_bps=peek() if peek is not None else None,
-            queue_per_slot=self._queue_per_slot())
+            queue_per_slot=self._queue_per_slot(), rid=req.rid)
 
     @staticmethod
     def _try_submit(eng: ContinuousBatchingEngine, req: Request) -> bool:
@@ -446,9 +458,16 @@ class EdgeCluster:
             n_replicas=self.n_live, occupancy=occ,
             queue_per_slot=self._queue_per_slot(), miss_rate=miss_rate)
         if decision > 0:
-            self.scale_up()
+            idx = self.scale_up()
         elif decision < 0:
-            self.scale_down()
+            idx = self.scale_down()
+        if decision and self._tel is not None:
+            # the autoscaler just appended its (tick, ±1, reason) event
+            reason = self.autoscaler.events[-1][2]
+            self._tel.instant(
+                "autoscale_up" if decision > 0 else "autoscale_down",
+                cat="autoscale", replica=idx, reason=reason,
+                n_live=self.n_live, occupancy=round(occ, 3))
 
     # -- the cluster tick -----------------------------------------------------
     def step(self) -> bool:
@@ -467,6 +486,11 @@ class EdgeCluster:
         self.collect()                     # O(new finishes): SLO window
         if self.autoscaler is not None:
             self._observe_autoscaler()
+        if self._tel is not None:
+            self._tel.set("cluster.n_live", self.n_live)
+            self._tel.set("cluster.queue_per_slot", self._queue_per_slot())
+            self._tel.set("cluster.slo_parked", len(self._slo_parked))
+            self._tel.set("cluster.parked_moves", len(self._parked))
         return (any(progressed) or acted or draining or drained
                 or readmitted or bool(self._parked)
                 or bool(self._slo_parked))
@@ -482,6 +506,10 @@ class EdgeCluster:
             if self.clock - since > max_age:
                 self.slo_rejected += 1     # aged out: terminal rejection
                 self.slo_park_expired += 1
+                if self._tel is not None:
+                    self._tel.instant("slo_park_expired", cat="admission",
+                                      rid=req.rid,
+                                      parked_ticks=self.clock - since)
                 acted = True
                 continue
             verdict = self._decide(req) if self.admission is not None \
@@ -509,6 +537,12 @@ class EdgeCluster:
                     sess.handover_ticks = list(ch.handover_ticks)
                     acted = True
                     self.handovers += 1
+                    if self._tel is not None:
+                        self._tel.inc("cluster.handovers")
+                        self._tel.instant(
+                            "handover", cat="migration",
+                            rid=sess.request.rid, from_replica=r,
+                            to_cell=int(pending), policy=self.handover)
                     if self.handover == "stay":
                         # acknowledge the event but keep the session where
                         # it is: every later uplink transfer pays
@@ -549,7 +583,20 @@ class EdgeCluster:
         self.migrations += 1
         self.migration_bytes += snap.nbytes
         self.migration_transfer_s += t
-        if inject_session(self.replicas[target], snap):
+        if self._tel is not None:
+            self._tel.inc("cluster.migrations")
+            self._tel.inc("cluster.migration_bytes", snap.nbytes)
+            self._tel.observe("cluster.migration_backhaul_s", t)
+            self._tel.instant("migrate_send", cat="migration",
+                              rid=snap.rid, from_replica=r,
+                              to_replica=target, bytes=snap.nbytes,
+                              transfer_s=round(t, 6))
+        landed = inject_session(self.replicas[target], snap)
+        if self._tel is not None:
+            self._tel.instant("migrate_inject" if landed
+                              else "migrate_park", cat="migration",
+                              rid=snap.rid, to_replica=target)
+        if landed:
             self._land(snap.rid, target, sess.request.channel)
         else:
             self._parked.append(("migrate", snap, target))
@@ -579,6 +626,11 @@ class EdgeCluster:
             "replayed_tokens": len(base.tokens)})
         self.replays += 1
         self.replayed_tokens += len(base.tokens)
+        if self._tel is not None:
+            self._tel.inc("cluster.replays")
+            self._tel.instant("drop_replay", cat="migration", rid=rid,
+                              from_replica=r, to_replica=target,
+                              replayed_tokens=len(base.tokens))
         prompt = base.request.prompt
         req = Request(
             rid=rid,
@@ -778,7 +830,7 @@ class EdgeCluster:
                     st["decoded_slot_ticks"]
                     / max(st["decode_ticks"] * eng.pool.n_slots, 1), 3),
             })
-        return {
+        out = {
             "n_replicas": len(self.replicas),
             "n_live": self.n_live,
             "placement": self.placement,
@@ -836,3 +888,6 @@ class EdgeCluster:
             },
             "per_replica": per_replica,
         }
+        if self._tel is not None:
+            self._tel.registry.ingest("cluster.stats", out)
+        return out

@@ -81,6 +81,10 @@ class ModeController:
                              key=lambda p: p.payload_bytes).mode
         self._payload = {p.mode: p.payload_bytes
                          for p in orchestrator.profiles}
+        #: optional observer ``(rid, tick, from_mode, to_mode) -> None``
+        #: fired on every deadline escalation (telemetry engines attach a
+        #: trace-event emitter here; None costs nothing)
+        self.on_escalate = None
 
     # -- session lifecycle ----------------------------------------------------
     def admit(self, rid: Hashable, requirement: Optional[AppRequirement],
@@ -155,6 +159,8 @@ class ModeController:
                 # budget at risk: drop to the cheapest calibrated mode NOW,
                 # overriding dwell/hysteresis (they exist to damp flapping,
                 # not to ride a collapsing link into a deadline miss)
+                if self.on_escalate is not None:
+                    self.on_escalate(rid, tick, int(chosen[i]), self._cheapest)
                 mode = self._cheapest
                 ctl.escalations += 1
             self.orch.force_mode(rid, mode)   # single commit point: one

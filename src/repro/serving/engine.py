@@ -31,6 +31,7 @@ from repro.core import split as SP
 from repro.core.orchestrator import Orchestrator
 from repro.models import sharding
 from repro.models import transformer as T
+from repro.serving.telemetry import Telemetry, now as _now
 
 
 def make_serve_step(cfg: ModelConfig, *, mode: Optional[int] = None):
@@ -69,8 +70,9 @@ class ServingEngine:
     def __init__(self, params, cfg: ModelConfig, *, cache_len: int = 512,
                  batch: int = 1,
                  orchestrator: Optional[Orchestrator] = None,
-                 mesh=None):
+                 mesh=None, telemetry: Optional[Telemetry] = None):
         self.mesh = mesh
+        self._tel = telemetry
         self.params = sharding.shard_params(params, mesh)
         self.cfg = cfg
         self.cache_len = cache_len
@@ -141,8 +143,12 @@ class ServingEngine:
                 cfg = self.cfg
                 self._prefill_fn = jax.jit(
                     lambda p, t, s: T.prefill(p, t, cfg, s))
+            t0 = _now()
             logits, self.states = self._prefill_fn(
                 self.params, jnp.asarray(tokens), self.states)
+            if self._tel is not None:
+                jax.block_until_ready(logits)
+                self._tel.observe("engine_sync.prefill_s", _now() - t0)
             self.pos = S
             return logits
         step = self._step(None)
@@ -163,6 +169,7 @@ class ServingEngine:
         from repro.core import bottleneck
         tok = first_token
         out: List[np.ndarray] = []
+        t0 = _now()
         for _ in range(n_steps):
             mode: Optional[int] = None
             if self.orch is not None:
@@ -184,4 +191,10 @@ class ServingEngine:
             key = mode if mode is not None else -1
             self.stats.mode_counts[key] = \
                 self.stats.mode_counts.get(key, 0) + 1
+            if self._tel is not None:
+                t1 = _now()
+                self._tel.observe("engine_sync.intertoken_s", t1 - t0)
+                self._tel.inc("engine_sync.decode_wire_bytes", int(pb))
+                self._tel.inc("engine_sync.decode_tokens", int(nxt.size))
+                t0 = t1
         return np.concatenate(out, axis=-1)

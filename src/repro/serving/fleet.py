@@ -23,8 +23,9 @@ place that derives the signals.
 """
 from __future__ import annotations
 
+from collections import deque
 from dataclasses import dataclass
-from typing import List, Optional
+from typing import Deque, List, Optional
 
 import numpy as np
 
@@ -54,36 +55,66 @@ class SLOAdmissionConfig:
 
 class SLOAdmission:
     """Predictive admission gate. ``decide`` returns ``"admit"``,
-    ``"park"``, or ``"reject"`` and tallies per-reason counters."""
+    ``"park"``, or ``"reject"``, tallies per-reason counters, and appends
+    one structured record per decision to the bounded ``events`` deque
+    (verdict, reason, predicted deadline margin, queue-per-slot at
+    decision time) — fleet-bench rejections stay auditable post-hoc.
+    Attaching a :class:`~repro.serving.telemetry.Telemetry` (the cluster
+    does this on its control-plane lane) additionally stamps every
+    decision onto the trace timeline."""
 
     def __init__(self, min_payload_bytes: Optional[int] = None,
-                 cfg: Optional[SLOAdmissionConfig] = None):
+                 cfg: Optional[SLOAdmissionConfig] = None, *,
+                 events_capacity: int = 4096):
         self.min_payload_bytes = min_payload_bytes
         self.cfg = cfg if cfg is not None else SLOAdmissionConfig()
         self.admitted = 0
         self.rejected_link = 0       # link-hopeless rejections
         self.rejected_deadline = 0   # predicted session-SLO miss
         self.parked = 0
+        #: last ``events_capacity`` decision records (oldest dropped)
+        self.events: Deque[dict] = deque(maxlen=int(events_capacity))
+        #: optional :class:`~repro.serving.telemetry.Telemetry`; when set,
+        #: every decision also lands on the trace timeline as an instant
+        self.telemetry = None
 
     def decide(self, *, slo_ticks: Optional[int],
                predicted_wait_ticks: int, service_ticks: int,
                capacity_bps: Optional[float] = None,
-               queue_per_slot: float = 0.0) -> str:
+               queue_per_slot: float = 0.0, rid=None) -> str:
+        verdict, reason = "admit", "ok"
         if capacity_bps is not None and self.min_payload_bytes:
             tx = tx_seconds(self.min_payload_bytes,
                             max(float(capacity_bps), 1.0))
             if tx > self.cfg.hopeless_factor * self.cfg.latency_budget_s:
-                self.rejected_link += 1
-                return "reject"
-        if slo_ticks is not None \
-                and predicted_wait_ticks + service_ticks > slo_ticks:
+                verdict, reason = "reject", "link_hopeless"
+        # predicted margin: SLO ticks left after queue wait + service time
+        # (negative = predicted miss); None when the request carries no SLO
+        margin = (slo_ticks - (predicted_wait_ticks + service_ticks)
+                  if slo_ticks is not None else None)
+        if verdict == "admit":
+            if margin is not None and margin < 0:
+                verdict, reason = "reject", "deadline"
+            elif queue_per_slot > self.cfg.park_queue_per_slot:
+                verdict, reason = "park", "backlog"
+        if reason == "link_hopeless":
+            self.rejected_link += 1
+        elif reason == "deadline":
             self.rejected_deadline += 1
-            return "reject"
-        if queue_per_slot > self.cfg.park_queue_per_slot:
+        elif verdict == "park":
             self.parked += 1
-            return "park"
-        self.admitted += 1
-        return "admit"
+        else:
+            self.admitted += 1
+        record = {"rid": rid, "verdict": verdict, "reason": reason,
+                  "margin_ticks": margin,
+                  "predicted_wait_ticks": int(predicted_wait_ticks),
+                  "service_ticks": int(service_ticks),
+                  "queue_per_slot": round(float(queue_per_slot), 4)}
+        self.events.append(record)
+        if self.telemetry is not None:
+            self.telemetry.instant("slo_admission", cat="admission",
+                                   **record)
+        return verdict
 
     def stats(self) -> dict:
         return {

@@ -33,6 +33,13 @@ Orchestration state migrates with the session: the per-link capacity EWMA
 and attach at the target, so mode selection after the handover continues
 exactly where it left off instead of re-cold-starting.
 
+Every migration is observable: an ``EdgeCluster`` built with
+``telemetry=`` emits ``migrate_send`` / ``migrate_inject`` /
+``migrate_park`` trace instants on the cluster lane (snapshot bytes,
+simulated backhaul seconds) and folds the totals into
+``cluster.migrations`` / ``cluster.migration_bytes`` counters plus the
+``cluster.migration_backhaul_s`` histogram — see docs/observability.md.
+
 Wire format (``MigrationSnapshot.wire``): the state pytree is flattened;
 each floating leaf is either shipped raw (``bits=0``) or symmetric
 row-wise quantized at ``bits`` (codes + one scale per row — the same

@@ -28,7 +28,12 @@ class Request:
     channel: Optional[Channel] = None  # this user's uplink (None: engine default)
     requirement: Optional[AppRequirement] = None
     arrival_tick: int = 0              # engine tick at which the UE submits
-    t_submit: float = 0.0              # wall-clock stamp (set by the engine)
+    #: wall-clock stamps on the shared telemetry clock
+    #: (``serving.telemetry.now``), set by the engine: queue entry and
+    #: admission pop — TTFT measures from t_submit, the
+    #: admission-to-first-token histogram from t_admit
+    t_submit: float = 0.0
+    t_admit: float = 0.0
     #: session-level SLO in engine ticks: the request should FINISH within
     #: this many ticks of its arrival (queue wait included). ``None`` means
     #: no session SLO — only the per-token latency budget applies. The

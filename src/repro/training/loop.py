@@ -9,7 +9,6 @@ The same ``make_train_step`` serves three callers:
 from __future__ import annotations
 
 import functools
-import time
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
@@ -20,6 +19,7 @@ from repro.core import pipeline as PL
 from repro.core import split as SP
 from repro.models import sharding
 from repro.models import transformer as T
+from repro.serving import telemetry
 from repro.training import optimizer as opt
 
 AUX_WEIGHT = 0.01     # MoE load-balance loss weight
@@ -102,13 +102,13 @@ def train_loop(params, cfg: ModelConfig, tcfg: TrainConfig,
     step_fn = jax.jit(make_train_step(cfg, tcfg, mode=mode))
     opt_state = opt.init(params)
     history = []
-    t0 = time.time()
+    t0 = telemetry.now()
     for s in range(steps):
         batch = {k: jnp.asarray(v) for k, v in data_fn(s).items()}
         params, opt_state, m = step_fn(params, opt_state, batch)
         if s % log_every == 0 or s == steps - 1:
             rec = {k: float(v) for k, v in m.items()}
-            rec.update(step=s, wall=time.time() - t0)
+            rec.update(step=s, wall=telemetry.now() - t0)
             history.append(rec)
             print(f"[train] step {s:5d} loss {rec['loss']:.4f} "
                   f"lm {rec['lm_loss']:.4f} lr {rec['lr']:.2e} "

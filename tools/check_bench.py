@@ -70,10 +70,23 @@ decode tail must stay gated once it has ever been benchmarked):
     ``MIN_LOOP_SPEEDUP``), plus the usual ``BENCH_TOLERANCE`` regression
     check of ``mega_fused_tick_us`` against the committed baseline.
 
+And, always, over the serving artifact's telemetry sections
+(see docs/observability.md):
+
+12. every offered-load level must carry a ``latency`` section with
+    TTFT and inter-token p50/p90/p99 percentiles (``run_level`` always
+    instruments — a missing section means telemetry silently fell off
+    the measured path);
+13. ``telemetry_overhead.ratio`` — the fully-instrumented engine must
+    keep at least ``TELEMETRY_FLOOR`` x the uninstrumented engine's
+    decode tokens/s (an in-run interleaved A/B on the same box —
+    observability must stay off the hot path).
+
 Environment overrides: ``MIN_LOOP_SPEEDUP`` (default 1.15),
 ``BENCH_TOLERANCE`` (default 0.3), ``SCALE_FLOOR`` (default 0.5),
 ``FLEET_FLOOR`` (default 0.5), ``SHARD_FLOOR`` (default 0.1),
-``MEGA_FLOOR`` (default 1.0), ``REQUIRE_SLOT_SCALING`` (default unset),
+``MEGA_FLOOR`` (default 1.0), ``TELEMETRY_FLOOR`` (default 0.95),
+``REQUIRE_SLOT_SCALING`` (default unset),
 ``FLEET_OPTIONAL`` / ``KERNELS_OPTIONAL`` (default unset — set to 1 in
 jobs that legitimately skip the fleet / kernel bench).
 """
@@ -286,6 +299,36 @@ def check_slot_scaling(sc: dict | None) -> list:
     return failures
 
 
+def check_telemetry(new: dict) -> list:
+    """Gates over the serving artifact's telemetry sections: mandatory
+    latency percentiles at every offered-load level, and the
+    instrumented-vs-plain overhead A/B (observability must not tax the
+    hot path)."""
+    failures = []
+    tel_floor = float(os.environ.get("TELEMETRY_FLOOR", "0.95"))
+    for lvl in new.get("levels", []):
+        lat = lvl.get("latency") or {}
+        for name in ("engine.ttft_s", "engine.intertoken_s"):
+            h = lat.get(name) or {}
+            if any(k not in h for k in ("p50", "p90", "p99")):
+                failures.append(
+                    f"load {lvl.get('offered_load_req_per_tick')}: latency "
+                    f"section missing {name} p50/p90/p99 — every level "
+                    "must report instrumented percentiles")
+    ov = new.get("telemetry_overhead")
+    if ov is None:
+        failures.append("telemetry_overhead missing from the bench "
+                        "artifact — the instrumented-vs-plain A/B must "
+                        "run (do not pass --overhead-repeats 0 in CI)")
+    elif (ov.get("ratio") or 0.0) < tel_floor:
+        failures.append(
+            f"instrumented engine kept only {ov.get('ratio')}x the plain "
+            f"engine's decode rate, below the {tel_floor} floor "
+            f"(telemetry {ov.get('telemetry_tok_per_s')} vs plain "
+            f"{ov.get('plain_tok_per_s')} tok/s)")
+    return failures
+
+
 def check(new: dict, baseline: dict | None) -> list:
     failures = []
     min_speedup = float(os.environ.get("MIN_LOOP_SPEEDUP", "1.15"))
@@ -336,6 +379,7 @@ def check(new: dict, baseline: dict | None) -> list:
                 "scenario is not actually exceeding the dense cache")
 
     failures += check_slot_scaling(new.get("slot_scaling"))
+    failures += check_telemetry(new)
 
     if baseline is not None:
         base_levels = {l["offered_load_req_per_tick"]: l
@@ -390,6 +434,8 @@ def main(argv) -> int:
         "long_prompt": {k: (new.get("long_prompt") or {}).get(k)
                         for k in ("finished", "requests", "over_capacity",
                                   "decode_tok_per_s", "page_occupancy")},
+        "telemetry_overhead_ratio": (new.get("telemetry_overhead")
+                                     or {}).get("ratio"),
     }
     if new.get("slot_scaling") is not None:
         summary["slot_scaling"] = [
